@@ -1,0 +1,39 @@
+"""Shared benchmark utilities: timing, result tables, output dirs."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def save(name: str, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def table(rows: list[dict], cols: list[str]) -> str:
+    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols}
+    head = " | ".join(c.ljust(widths[c]) for c in cols)
+    sep = "-+-".join("-" * widths[c] for c in cols)
+    body = "\n".join(
+        " | ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols)
+        for r in rows)
+    return f"{head}\n{sep}\n{body}"

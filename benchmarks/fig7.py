@@ -1,0 +1,66 @@
+"""Paper Fig. 7 — spMTTKRP execution time + peak-performance-fraction across
+implementations, all modes, rank 10.
+
+Device roles on this host (DESIGN.md §2): the PRISM chunked engine plays
+UPMEM PIM; ALTO-ordered segment-sum plays the CPU baseline; plain COO
+scatter plays the GPU (BLCO) baseline.  Peak-performance fraction is
+useful-FLOPs / (wall × host peak), mirroring the paper's efficiency metric —
+the structural (dry-run) roofline fraction for the TPU target lives in
+EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TABLE1, make_engine, init_factors, table1_tensor
+
+from .common import save, table, timeit
+
+RANK = 10
+# crude single-core peak estimate for the fraction metric (FMA @ ~3 GHz AVX2)
+HOST_PEAK_FLOPS = 48e9
+
+
+def mttkrp_flops(st, rank: int) -> float:
+    # per nonzero: (N-1) hadamard mults + 1 value mult + 1 add, × rank
+    return st.nnz * rank * (st.ndim + 1.0)
+
+
+def run(fast: bool = False):
+    rows = []
+    tensors = ["nell2", "nell1", "amazon", "delicious", "lbnl", "5d_large"]
+    if fast:
+        tensors = ["nell2", "delicious"]
+    engines = [("prism-chunked", "chunked"), ("prism-fixed", "fixed"),
+               ("alto-cpu", "alto"), ("coo-gpu-style", "ref")]
+    for tname in tensors:
+        st = table1_tensor(tname, nnz=8000 if fast else None)
+        factors = [jnp.asarray(f) for f in init_factors(st.shape, RANK, 0)]
+        flops = mttkrp_flops(st, RANK)
+        for ename, engine in engines:
+            eng = make_engine(st, engine, RANK, mem_bytes=256 * 1024)
+            per_mode = []
+            for mode in range(st.ndim):
+                t = timeit(eng, factors, mode, warmup=1,
+                           iters=2 if fast else 3)
+                per_mode.append(t)
+            total = sum(per_mode)
+            frac = flops * st.ndim / (total * HOST_PEAK_FLOPS)
+            rows.append(dict(
+                tensor=tname, engine=ename,
+                time_all_modes_ms=round(total * 1e3, 2),
+                peak_fraction=f"{frac:.2e}",
+            ))
+            print(f"[fig7] {tname} {ename}: {rows[-1]['time_all_modes_ms']}ms",
+                  flush=True)
+    print("\n== Fig. 7: spMTTKRP time + peak-performance fraction ==")
+    print(table(rows, ["tensor", "engine", "time_all_modes_ms",
+                       "peak_fraction"]))
+    save("fig7", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

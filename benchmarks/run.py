@@ -1,0 +1,44 @@
+"""Benchmark entrypoint: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig6,fig7,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced nnz/iters (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import fig6, fig7, fig8_9, table1
+    suites = {
+        "table1": lambda: table1.run(),
+        "fig6": lambda: fig6.run(fast=args.fast),
+        "fig7": lambda: fig7.run(fast=args.fast),
+        "fig8_9": lambda: fig8_9.run(fast=args.fast),
+    }
+    only = args.only.split(",") if args.only else list(suites)
+    failed = []
+    for name in only:
+        print(f"\n######## benchmarks.{name} ########", flush=True)
+        t0 = time.time()
+        try:
+            suites[name]()
+            print(f"######## {name} done in {time.time()-t0:.1f}s ########",
+                  flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        sys.exit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

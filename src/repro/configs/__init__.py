@@ -1,0 +1,34 @@
+"""Assigned architecture configs.  `get_config(name)` returns the exact
+published config; `get_smoke_config(name)` a reduced same-family config for
+CPU smoke tests."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "gemma3_4b",
+    "qwen3_14b",
+    "minitron_4b",
+    "command_r_35b",
+    "llama4_scout_17b_a16e",
+    "qwen3_moe_30b_a3b",
+    "xlstm_350m",
+    "whisper_medium",
+    "internvl2_1b",
+    "jamba_1_5_large_398b",
+]
+
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def _mod(name: str):
+    name = ALIASES.get(name, name)
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(name: str):
+    return _mod(name).config()
+
+
+def get_smoke_config(name: str):
+    return _mod(name).smoke_config()

@@ -1,0 +1,63 @@
+"""Baselines the paper compares against, re-implemented in JAX.
+
+  * ALTO [Helal et al., ICS'21] — linearized coordinate order: every nonzero
+    keyed by a bit-interleaved (Morton-like) linearization of its coords and
+    processed in that order.  On CPU the win is cache locality; in XLA the
+    honest analogue is sorted-segment reductions (`indices_are_sorted=True`)
+    over the linearized order.
+  * Plain COO ("BLCO-like" GPU style) — unsorted atomic scatter-add.
+
+Both compute bit-identical results to `mttkrp_coo`; they differ in memory
+access structure, which the benchmarks measure.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["alto_order", "mttkrp_alto", "mttkrp_plain_coo"]
+
+
+def alto_order(coords: np.ndarray, shape: tuple[int, ...]) -> np.ndarray:
+    """ALTO linearization: interleave the bits of each mode's coordinate,
+    mode-major round-robin over the bits each mode actually needs (adaptive —
+    modes with fewer bits drop out early, as in the ALTO paper)."""
+    n = len(shape)
+    bits = [max(1, int(np.ceil(np.log2(max(s, 2))))) for s in shape]
+    maxbits = max(bits)
+    key = np.zeros(coords.shape[0], dtype=np.int64)
+    pos = 0
+    for b in range(maxbits):
+        for m in range(n):
+            if b < bits[m]:
+                key |= ((coords[:, m].astype(np.int64) >> b) & 1) << pos
+                pos += 1
+    return np.argsort(key, kind="stable")
+
+
+@partial(jax.jit, static_argnames=("mode", "out_dim"))
+def mttkrp_alto(factors, coords, values, *, mode: int, out_dim: int):
+    """spMTTKRP over ALTO-ordered nonzeros with sorted segment reduction.
+    `coords`/`values` must already be in ALTO order (see `alto_order`)."""
+    part = values[:, None].astype(jnp.float32)
+    for m, f in enumerate(factors):
+        if m == mode:
+            continue
+        part = part * f[coords[:, m]]
+    seg = coords[:, mode]
+    return jax.ops.segment_sum(part, seg, num_segments=out_dim)
+
+
+@partial(jax.jit, static_argnames=("mode", "out_dim"))
+def mttkrp_plain_coo(factors, coords, values, *, mode: int, out_dim: int):
+    """Unsorted scatter-add COO (GPU-atomics style)."""
+    part = values[:, None].astype(jnp.float32)
+    for m, f in enumerate(factors):
+        if m == mode:
+            continue
+        part = part * f[coords[:, m]]
+    out = jnp.zeros((out_dim, factors[0].shape[1]), jnp.float32)
+    return out.at[coords[:, mode]].add(part, mode="drop")

@@ -1,0 +1,271 @@
+"""Full CP-ALS (paper Algorithm 1) with pluggable MTTKRP engines.
+
+Everything except MTTKRP — gram matrices, Hadamard products, the pseudo-
+inverse solve, normalization, convergence — runs in float on the host side,
+exactly as the paper leaves them on the CPU.  The MTTKRP engine is swappable:
+
+  engine="ref"       plain COO (paper Fig. 1 definition)
+  engine="alto"      ALTO-ordered baseline
+  engine="chunked"   PRISM chunked format (float)
+  engine="fixed"     PRISM chunked + paper Alg. 2 fixed point ("int7"/"int15-12")
+  engine="hetero"    dense(MXU)/sparse split (paper §IV-D analogue)
+  engine="pallas"    Pallas TPU kernel (kernels/ops.py), interpret on CPU
+  engine=callable    custom: f(factors, mode) -> (I_mode, R)
+
+Normalization is L-infinity by default (paper §IV-C: uses the full [-1, 1]
+range, which fixed point needs); L2 is available for comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import baselines, hetero, lockfree, mttkrp
+from .chunking import ChunkedTensor, chunk_tensor
+from .partition import decide_partition
+from .qformat import FIXED_PRESETS, QFormat, value_qformat
+from .sptensor import SparseTensor
+
+__all__ = [
+    "CPResult",
+    "cp_als",
+    "make_engine",
+    "init_factors",
+    "avg_abs_diff",
+    "fit_value",
+    "reconstruct_nnz",
+]
+
+
+@dataclasses.dataclass
+class CPResult:
+    factors: list[np.ndarray]
+    lam: np.ndarray
+    fit_history: list[float]
+    diff_history: list[float]
+    iter_times: list[float]
+    engine: str
+
+
+def init_factors(shape, rank: int, seed: int = 0) -> list[jnp.ndarray]:
+    """Random init in [0, 1) — respects the [-1, 1] fixed-point range."""
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.uniform(0, 1, size=(d, rank)).astype(np.float32)) for d in shape]
+
+
+def _normalize(f: jnp.ndarray, norm: str):
+    if norm == "linf":
+        lam = jnp.max(jnp.abs(f), axis=0)
+    elif norm == "l2":
+        lam = jnp.linalg.norm(f, axis=0)
+    else:
+        raise ValueError(norm)
+    lam = jnp.where(lam == 0, 1.0, lam)
+    return f / lam, lam
+
+
+def reconstruct_nnz(factors, lam, coords) -> jnp.ndarray:
+    """x̂ at the given coordinates: Σ_r λ_r ∏_m F_m[c_m, r]."""
+    prod = jnp.asarray(lam)[None, :]
+    for m, f in enumerate(factors):
+        prod = prod * jnp.asarray(f)[coords[:, m]]
+    return prod.sum(axis=1)
+
+
+def avg_abs_diff(st: SparseTensor, factors, lam, *, dense_limit: int = 1 << 22) -> float:
+    """Paper Fig. 6 metric: mean |X - X̂| over all elements when the tensor is
+    small enough, else over the nonzeros only (as done for Delicious/Lbnl)."""
+    if math.prod(st.shape) <= dense_limit:
+        dense = jnp.asarray(st.to_dense())
+        letters = "abcdefg"[: st.ndim]
+        sub = ",".join(f"{c}r" for c in letters)
+        approx = jnp.einsum(f"r,{sub}->{''.join(letters)}", jnp.asarray(lam),
+                            *[jnp.asarray(f) for f in factors])
+        return float(jnp.mean(jnp.abs(dense - approx)))
+    approx = reconstruct_nnz(factors, lam, jnp.asarray(st.coords))
+    return float(jnp.mean(jnp.abs(jnp.asarray(st.values) - approx)))
+
+
+def fit_value(st: SparseTensor, factors, lam, mlast=None, last_mode=None) -> float:
+    """fit = 1 - ||X - X̂||_F / ||X||_F, using the standard sparse identity
+    ||X - X̂||² = ||X||² - 2<X, X̂> + ||X̂||²."""
+    norm_x2 = st.norm() ** 2
+    grams = [jnp.asarray(f).T @ jnp.asarray(f) for f in factors]
+    had = jnp.asarray(lam)[:, None] * jnp.asarray(lam)[None, :]
+    for g in grams:
+        had = had * g
+    norm_approx2 = float(jnp.sum(had))
+    if mlast is not None and last_mode is not None:
+        inner = float(jnp.sum(mlast * (jnp.asarray(factors[last_mode]) * jnp.asarray(lam)[None, :])))
+    else:
+        inner = float(
+            jnp.dot(reconstruct_nnz(factors, lam, jnp.asarray(st.coords)), jnp.asarray(st.values))
+        )
+    resid = max(norm_x2 - 2 * inner + norm_approx2, 0.0)
+    return 1.0 - math.sqrt(resid) / max(math.sqrt(norm_x2), 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Engines
+# ---------------------------------------------------------------------------
+
+def make_engine(
+    st: SparseTensor,
+    method: str,
+    rank: int,
+    *,
+    mem_bytes: int | None = None,
+    chunk_shape: tuple[int, ...] | None = None,
+    capacity: int | None = None,
+    fixed_preset: str = "int7",
+    lockfree_mode: bool = False,
+    dense_fraction: float | None = None,
+) -> Callable:
+    """Build an MTTKRP engine closure: f(factors, mode) -> (I_mode, R) f32.
+
+    Chunk-based engines chunk the tensor ONCE (the chunked format is
+    mode-agnostic) — the tensor stays resident, only factors move per call,
+    matching the paper's rank-partitioning data-residency argument.
+    """
+    coords = jnp.asarray(st.coords)
+    values = jnp.asarray(st.values)
+
+    if method == "ref":
+        def engine(factors, mode):
+            return mttkrp.mttkrp_coo(tuple(factors), coords, values,
+                                      mode=mode, out_dim=st.shape[mode])
+        return engine
+
+    if method == "alto":
+        order = baselines.alto_order(st.coords, st.shape)
+        a_coords = jnp.asarray(st.coords[order])
+        a_values = jnp.asarray(st.values[order])
+        def engine(factors, mode):
+            return baselines.mttkrp_alto(tuple(factors), a_coords, a_values,
+                                         mode=mode, out_dim=st.shape[mode])
+        return engine
+
+    if method in ("chunked", "fixed", "hetero", "pallas"):
+        if chunk_shape is None:
+            plan = decide_partition(st, rank, mem_bytes=mem_bytes or 64 * 1024 * 1024)
+            chunk_shape = plan.chunk_shape
+            capacity = capacity or plan.capacity
+        ct = chunk_tensor(st, chunk_shape, capacity)
+        dev = mttkrp.chunked_device_arrays(ct)
+        cs, nd = ct.chunk_shape, ct.ndim
+
+        if method == "chunked":
+            mask = None
+            if lockfree_mode:
+                nnz_pt = jnp.asarray(ct.nnz_per_task)
+            def engine(factors, mode):
+                vals = dev["values"]
+                if lockfree_mode:
+                    m = lockfree.wave_collision_mask(dev["coords_rel"][:, :, mode], nnz_pt)
+                    vals = vals * m
+                return mttkrp.mttkrp_chunked(
+                    tuple(factors), dev["task_chunk"], dev["coords_rel"], vals,
+                    mode=mode, chunk_shape=cs, out_dim=st.shape[mode])
+            return engine
+
+        if method == "fixed":
+            qf, prec_shift = FIXED_PRESETS[fixed_preset]
+            vq = value_qformat(st.values, storage_bits=16)
+            qvalues = jnp.asarray(vq.quantize_np(ct.values))
+            nnz_pt = jnp.asarray(ct.nnz_per_task)
+            def engine(factors, mode):
+                qfactors = tuple(qf.quantize(f) for f in factors)
+                qvals = qvalues
+                if lockfree_mode:
+                    m = lockfree.wave_collision_mask(dev["coords_rel"][:, :, mode], nnz_pt)
+                    qvals = (qvals * m.astype(qvals.dtype))
+                qout = mttkrp.mttkrp_chunked_fixed(
+                    qfactors, dev["task_chunk"], dev["coords_rel"], qvals,
+                    mode=mode, chunk_shape=cs, out_dim=st.shape[mode],
+                    matrix_frac=qf.frac_bits, value_frac=vq.frac_bits,
+                    prec_shift=prec_shift)
+                return mttkrp.dequantize_output(qout, qf.frac_bits, prec_shift)
+            return engine
+
+        if method == "hetero":
+            split = hetero.split_tasks(ct, rank, dense_fraction=dense_fraction)
+            dense_blocks = jnp.asarray(hetero.densify_tasks(ct, split.dense_idx))
+            def engine(factors, mode):
+                return hetero.mttkrp_hetero(
+                    tuple(factors), ct, split, dense_blocks,
+                    mode=mode, out_dim=st.shape[mode])
+            return engine
+
+        if method == "pallas":
+            from ..kernels import ops as kops
+            def engine(factors, mode):
+                return kops.mttkrp_pallas(
+                    tuple(factors), dev["task_chunk"], dev["coords_rel"],
+                    dev["values"], mode=mode, chunk_shape=cs,
+                    out_dim=st.shape[mode], interpret=True)
+            return engine
+
+    raise ValueError(f"unknown engine {method!r}")
+
+
+# ---------------------------------------------------------------------------
+# CP-ALS driver (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def cp_als(
+    st: SparseTensor,
+    rank: int,
+    n_iters: int = 5,
+    *,
+    engine: str | Callable = "ref",
+    norm: str = "linf",
+    seed: int = 0,
+    track_diff: bool = True,
+    tol: float | None = None,
+    **engine_kwargs,
+) -> CPResult:
+    n = st.ndim
+    factors = init_factors(st.shape, rank, seed)
+    lam = jnp.ones((rank,), jnp.float32)
+    eng = engine if callable(engine) else make_engine(st, engine, rank, **engine_kwargs)
+    eng_name = engine if isinstance(engine, str) else getattr(engine, "__name__", "custom")
+
+    fit_history, diff_history, iter_times = [], [], []
+    prev_fit = -np.inf
+    for it in range(n_iters):
+        t0 = time.perf_counter()
+        mlast = None
+        for mode in range(n):
+            m = eng([jnp.asarray(f) for f in factors], mode)
+            # Pseudo-inverse step: A = M (∘_{k≠mode} F_kᵀF_k)†  (Alg. 1 l.5-7)
+            v = jnp.ones((rank, rank), jnp.float32)
+            for k in range(n):
+                if k == mode:
+                    continue
+                fk = jnp.asarray(factors[k])
+                v = v * (fk.T @ fk)
+            a = m @ jnp.linalg.pinv(v)
+            a, lam = _normalize(a, norm)
+            factors[mode] = a
+            mlast = m
+        jax.block_until_ready(factors[-1])
+        iter_times.append(time.perf_counter() - t0)
+
+        f = fit_value(st, factors, lam, mlast=None, last_mode=None)
+        fit_history.append(f)
+        if track_diff:
+            diff_history.append(avg_abs_diff(st, factors, lam))
+        if tol is not None and abs(f - prev_fit) < tol:
+            break
+        prev_fit = f
+
+    return CPResult(
+        [np.asarray(f) for f in factors], np.asarray(lam),
+        fit_history, diff_history, iter_times, eng_name,
+    )

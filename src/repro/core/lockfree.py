@@ -1,0 +1,48 @@
+"""Lock-removal emulation (paper §IV-C, Fig. 6).
+
+On UPMEM, PRISM removes the locks guarding the shared per-DPU output buffer:
+when two of the 16 tasklets write the same output row in the same cycle, one
+update is lost.  The paper shows CP-ALS absorbs this imprecision.
+
+XLA scatter-adds are conflict-free by construction, so there is nothing to
+"remove" on TPU (DESIGN.md §2.1).  To still reproduce the paper's accuracy
+study, this module *emulates* the lost updates: nonzeros are grouped into
+waves of `n_tasklets` consecutive entries (tasklets advance in lock-step over
+the contiguous, sequential-reader-fed nonzero stream); within a wave, if two
+entries target the same output row, only the last writer survives.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wave_collision_mask"]
+
+N_TASKLETS = 16  # the paper's tasklet count
+
+
+@partial(jax.jit, static_argnames=("n_tasklets",))
+def wave_collision_mask(out_rows, nnz_per_task, *, n_tasklets: int = N_TASKLETS):
+    """out_rows: (T, P) int32 chunk-local output row per nonzero;
+    nnz_per_task: (T,).  Returns (T, P) f32 mask — 0 where an update is lost.
+
+    UPMEM tasklets each take a CONTIGUOUS block of P/G nonzeros (the paper
+    computes the partition with an arithmetic shift), so at "time" t the G
+    simultaneous writers are entries {j·P/G + t}.  An entry is lost iff a
+    higher-numbered tasklet writes the same row in the same wave
+    (last-writer-wins race)."""
+    t, p = out_rows.shape
+    g = n_tasklets
+    pad = (-p) % g
+    rows = jnp.pad(out_rows, ((0, 0), (0, pad)), constant_values=-1)
+    pp = p + pad
+    valid = (jnp.arange(pp)[None, :] < nnz_per_task[:, None])
+    rows = jnp.where(valid, rows, -1 - jnp.arange(pp)[None, :])  # uniquify pads
+    waves = rows.reshape(t, g, pp // g).transpose(0, 2, 1)  # (T, W, G)
+    same = waves[:, :, :, None] == waves[:, :, None, :]     # (T, W, G, G)
+    later = jnp.triu(jnp.ones((g, g), bool), k=1)
+    lost = jnp.any(same & later[None, None], axis=3)        # later dup exists
+    mask = ~lost.transpose(0, 2, 1).reshape(t, pp)[:, :p]
+    return mask.astype(jnp.float32)

@@ -1,0 +1,193 @@
+"""spMTTKRP reference + chunked implementations (float and fixed point).
+
+Three layers, all jit-able and shape-static:
+
+  * `mttkrp_coo`          — plain element-wise reference over COO (paper Fig. 1).
+  * `mttkrp_chunked`      — the PRISM design: vmap over chunk *tasks*; per task
+                            gather the chunk's factor blocks, compute partials,
+                            reduce into a chunk-local output, scatter-add to the
+                            global output (the "sum reduction").
+  * `mttkrp_chunked_fixed`— paper Algorithm 2, bit-exact Qm.n arithmetic:
+                            int32 products (safe because L-inf normalization
+                            bounds factors to [-1,1]) with arithmetic-shift
+                            requantization after every multiply.
+
+The chunked format is mode-agnostic: one chunking serves every MTTKRP mode
+(unlike FLYCOO's per-mode reorder) — only the gather/scatter roles rotate.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .chunking import ChunkedTensor
+from .qformat import QFormat
+
+__all__ = [
+    "mttkrp_coo",
+    "mttkrp_chunked",
+    "mttkrp_coo_fixed",
+    "mttkrp_chunked_fixed",
+    "chunked_device_arrays",
+    "gather_factor_blocks",
+]
+
+
+# ---------------------------------------------------------------------------
+# Plain COO reference (paper Fig. 1, element-wise definition).
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("mode", "out_dim"))
+def mttkrp_coo(factors, coords, values, *, mode: int, out_dim: int):
+    """Reference spMTTKRP.  factors: tuple of (I_m, R); coords (nnz, N) int32;
+    values (nnz,) f32.  Returns (out_dim, R) f32."""
+    part = values[:, None].astype(jnp.float32)
+    for m, f in enumerate(factors):
+        if m == mode:
+            continue
+        part = part * f[coords[:, m]]
+    out = jnp.zeros((out_dim, factors[0].shape[1]), jnp.float32)
+    return out.at[coords[:, mode]].add(part, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# Chunked (PRISM) implementation.
+# ---------------------------------------------------------------------------
+
+def chunked_device_arrays(ct: ChunkedTensor) -> dict:
+    """The static per-run arrays shipped to devices once (the paper keeps the
+    tensor resident across CP-ALS iterations; only factors move)."""
+    return dict(
+        task_chunk=jnp.asarray(ct.task_chunk),
+        coords_rel=jnp.asarray(ct.coords_rel),
+        values=jnp.asarray(ct.values),
+    )
+
+
+def gather_factor_blocks(factor, offsets, size: int):
+    """factor (I, R), offsets (T,) → (T, size, R) chunk-local blocks.
+    Boundary chunks clamp; clamped rows are never addressed by live nonzeros."""
+    idx = offsets[:, None] + jnp.arange(size)[None, :]
+    idx = jnp.minimum(idx, factor.shape[0] - 1)
+    return factor[idx]
+
+
+@partial(jax.jit, static_argnames=("mode", "chunk_shape", "out_dim"))
+def mttkrp_chunked(
+    factors,
+    task_chunk,
+    coords_rel,
+    values,
+    *,
+    mode: int,
+    chunk_shape: tuple[int, ...],
+    out_dim: int,
+):
+    """PRISM chunked spMTTKRP (float path).
+
+    factors : tuple of (I_m, R) f32
+    task_chunk : (T, N) int32; coords_rel : (T, P, N) int32; values : (T, P) f32
+    """
+    n = len(factors)
+    rank = factors[0].shape[1]
+    offsets = task_chunk * jnp.asarray(chunk_shape, dtype=jnp.int32)  # (T, N)
+
+    # Per-task partials: (T, P, R).  Padded entries have value 0 → no-op.
+    part = values[..., None].astype(jnp.float32)
+    for m in range(n):
+        if m == mode:
+            continue
+        blocks = gather_factor_blocks(factors[m], offsets[:, m], chunk_shape[m])
+        rows = jnp.take_along_axis(
+            blocks, coords_rel[:, :, m][..., None], axis=1
+        )  # (T, P, R)
+        part = part * rows
+
+    # Chunk-local reduction: (T, S_mode, R) — each task is its own "DPU".
+    s_out = chunk_shape[mode]
+    local = jnp.zeros((task_chunk.shape[0], s_out, rank), jnp.float32)
+    local = jax.vmap(lambda l, c, p: l.at[c].add(p, mode="drop"))(
+        local, coords_rel[:, :, mode], part
+    )
+
+    # Sum reduction of chunk-local partials into the global output.
+    out = jnp.zeros((out_dim, rank), jnp.float32)
+    rows = offsets[:, mode : mode + 1] + jnp.arange(s_out)[None, :]  # (T, S)
+    return out.at[rows.reshape(-1)].add(local.reshape(-1, rank), mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# Fixed point (paper Algorithm 2) — bit-exact Q arithmetic.
+# ---------------------------------------------------------------------------
+
+def _fixed_partials(qfactor_rows, qvalues, mode, matrix_frac, value_frac, prec_shift):
+    """Shared Alg.-2 inner loop.  qfactor_rows: list over modes of (..., R)
+    int32 gathered factor rows (entry at `mode` ignored); qvalues (...,) int32.
+    Returns int32 partial results in Q(.., matrix_frac - prec_shift)."""
+    n = len(qfactor_rows)
+    inputs = [m for m in range(n) if m != mode]
+    part = qfactor_rows[inputs[0]].astype(jnp.int32)
+    for m in inputs[1:]:
+        part = part * qfactor_rows[m].astype(jnp.int32)
+        part = jnp.right_shift(part, matrix_frac)  # arithmetic shift (Alg.2 l.12)
+    part = part * qvalues[..., None].astype(jnp.int32)
+    part = jnp.right_shift(part, value_frac + prec_shift)  # Alg.2 l.15
+    return part
+
+
+@partial(jax.jit, static_argnames=("mode", "out_dim", "matrix_frac", "value_frac", "prec_shift"))
+def mttkrp_coo_fixed(
+    qfactors, coords, qvalues, *,
+    mode: int, out_dim: int,
+    matrix_frac: int, value_frac: int, prec_shift: int = 0,
+):
+    """Fixed-point COO reference (oracle for the Pallas fixed kernel)."""
+    rows = [f[coords[:, m]] for m, f in enumerate(qfactors)]
+    part = _fixed_partials(rows, qvalues, mode, matrix_frac, value_frac, prec_shift)
+    out = jnp.zeros((out_dim, qfactors[0].shape[1]), jnp.int32)
+    return out.at[coords[:, mode]].add(part, mode="drop")
+
+
+@partial(jax.jit, static_argnames=("mode", "chunk_shape", "out_dim", "matrix_frac", "value_frac", "prec_shift"))
+def mttkrp_chunked_fixed(
+    qfactors, task_chunk, coords_rel, qvalues, *,
+    mode: int, chunk_shape: tuple[int, ...], out_dim: int,
+    matrix_frac: int, value_frac: int, prec_shift: int = 0,
+):
+    """Chunked fixed-point spMTTKRP (paper Alg. 2 on the chunked format).
+
+    qfactors: tuple of (I_m, R) int arrays (int16 for Q9.7, int32 for Q17.15);
+    qvalues: (T, P) int16/int32.  Output int32 in Q(·, matrix_frac-prec_shift).
+    """
+    n = len(qfactors)
+    rank = qfactors[0].shape[1]
+    offsets = task_chunk * jnp.asarray(chunk_shape, dtype=jnp.int32)
+
+    rows = []
+    for m in range(n):
+        if m == mode:
+            rows.append(None)
+            continue
+        blocks = gather_factor_blocks(qfactors[m], offsets[:, m], chunk_shape[m])
+        rows.append(
+            jnp.take_along_axis(blocks, coords_rel[:, :, m][..., None], axis=1)
+        )
+    rows = [r if r is not None else jnp.zeros((), jnp.int32) for r in rows]
+    part = _fixed_partials(rows, qvalues, mode, matrix_frac, value_frac, prec_shift)
+
+    s_out = chunk_shape[mode]
+    local = jnp.zeros((task_chunk.shape[0], s_out, rank), jnp.int32)
+    local = jax.vmap(lambda l, c, p: l.at[c].add(p, mode="drop"))(
+        local, coords_rel[:, :, mode], part
+    )
+    out = jnp.zeros((out_dim, rank), jnp.int32)
+    out_rows = offsets[:, mode : mode + 1] + jnp.arange(s_out)[None, :]
+    return out.at[out_rows.reshape(-1)].add(local.reshape(-1, rank), mode="drop")
+
+
+def dequantize_output(qout, matrix_frac: int, prec_shift: int) -> jnp.ndarray:
+    """Output of the fixed kernels is Q(·, matrix_frac - prec_shift)."""
+    return qout.astype(jnp.float32) / (1 << (matrix_frac - prec_shift))

@@ -1,0 +1,107 @@
+"""Qm.n fixed-point formats (paper §IV-C).
+
+UPMEM DPUs have no floating-point hardware, so PRISM runs the MTTKRP inner
+loop in fixed point.  On TPU the same formats attack the *memory* roofline
+term instead (narrow ints halve HBM bytes of a memory-bound kernel) and map
+onto the MXU's native int8/int16→int32 multiply path.
+
+Key paper facts encoded here:
+  * factor matrices are L-infinity normalized to [-1, 1], so a QX.f factor
+    value has magnitude ≤ 2^f; the product of two factor values fits int32
+    for every format the paper uses (the DPU is a 32-bit core — this is why
+    the paper's formats work at all).
+  * Q5.3 (8-bit) is too coarse to converge; Q9.7 (16-bit) is the preferred
+    mode-3 format; Q17.15 with prec_shift=3 is used for mode-4/5.
+  * tensor values are quantized to 16 bits with a runtime-determined
+    precision (the value range is only known after reading the tensor).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["QFormat", "Q5_3", "Q9_7", "Q17_15", "value_qformat", "FIXED_PRESETS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """Signed fixed point with `int_bits` integer bits (incl. sign) and
+    `frac_bits` fractional bits; stored in `storage_bits` two's complement."""
+
+    int_bits: int
+    frac_bits: int
+
+    @property
+    def storage_bits(self) -> int:
+        return self.int_bits + self.frac_bits
+
+    @property
+    def scale(self) -> int:
+        return 1 << self.frac_bits
+
+    @property
+    def storage_dtype(self):
+        bits = self.storage_bits
+        if bits <= 8:
+            return jnp.int8
+        if bits <= 16:
+            return jnp.int16
+        return jnp.int32
+
+    @property
+    def np_dtype(self):
+        bits = self.storage_bits
+        if bits <= 8:
+            return np.int8
+        if bits <= 16:
+            return np.int16
+        return np.int32
+
+    @property
+    def max_int(self) -> int:
+        return (1 << (self.storage_bits - 1)) - 1
+
+    @property
+    def min_int(self) -> int:
+        return -(1 << (self.storage_bits - 1))
+
+    def quantize_np(self, x: np.ndarray) -> np.ndarray:
+        q = np.round(np.asarray(x, dtype=np.float64) * self.scale)
+        return np.clip(q, self.min_int, self.max_int).astype(self.np_dtype)
+
+    def quantize(self, x) -> jnp.ndarray:
+        q = jnp.round(x.astype(jnp.float32) * self.scale)
+        return jnp.clip(q, self.min_int, self.max_int).astype(self.storage_dtype)
+
+    def dequantize(self, q) -> jnp.ndarray:
+        return q.astype(jnp.float32) / self.scale
+
+    def __str__(self):
+        return f"Q{self.int_bits}.{self.frac_bits}"
+
+
+# The paper's formats.
+Q5_3 = QFormat(5, 3)      # 8-bit — shown not to converge; kept for the study.
+Q9_7 = QFormat(9, 7)      # 16-bit — preferred for mode-3 tensors.
+Q17_15 = QFormat(17, 15)  # 32-bit — preferred for mode-4/5, prec_shift=3.
+
+# (factor format, prec_shift) presets named as in the paper's Fig. 6.
+FIXED_PRESETS: dict[str, tuple[QFormat, int]] = {
+    "int3": (Q5_3, 0),
+    "int7": (Q9_7, 0),
+    "int15-12": (Q17_15, 3),
+}
+
+
+def value_qformat(values: np.ndarray, storage_bits: int = 16) -> QFormat:
+    """Runtime-determined precision for tensor nonzero values (paper §IV-C:
+    'the range of nonzero values cannot be determined before reading the
+    tensor').  Chooses the Q format with the most fractional bits that still
+    represents max|value| in `storage_bits`."""
+    vmax = float(np.max(np.abs(values))) if values.size else 1.0
+    int_bits = max(1, math.ceil(math.log2(vmax + 1e-12)) + 1) + 1  # +sign
+    int_bits = min(int_bits, storage_bits - 1)
+    return QFormat(int_bits, storage_bits - int_bits)

@@ -1,0 +1,125 @@
+"""Sparse tensor container + synthetic dataset generators.
+
+The paper evaluates on FROSTT tensors (Table I). The offline container cannot
+ship FROSTT, so `table1_tensor` generates synthetic tensors whose mode count,
+relative dimension shape, and nonzero *distribution* (balanced vs imbalanced)
+match each Table-I entry, scaled to CPU-runnable sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+__all__ = [
+    "SparseTensor",
+    "random_tensor",
+    "table1_tensor",
+    "TABLE1",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseTensor:
+    """COO sparse tensor. Coordinates are (nnz, N) int32, values (nnz,) f32."""
+
+    coords: np.ndarray
+    values: np.ndarray
+    shape: tuple[int, ...]
+
+    def __post_init__(self):
+        assert self.coords.ndim == 2 and self.coords.shape[1] == len(self.shape)
+        assert self.values.shape == (self.coords.shape[0],)
+
+    @property
+    def nnz(self) -> int:
+        return self.coords.shape[0]
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def density(self) -> float:
+        return self.nnz / math.prod(self.shape)
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=np.float64)
+        np.add.at(out, tuple(self.coords.T), self.values.astype(np.float64))
+        return out.astype(np.float32)
+
+    def norm(self) -> float:
+        return float(np.linalg.norm(self.values.astype(np.float64)))
+
+    def permuted(self, order: np.ndarray) -> "SparseTensor":
+        return SparseTensor(self.coords[order], self.values[order], self.shape)
+
+
+def _dedup(coords: np.ndarray, values: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Merge duplicate coordinates by summing values (keeps COO canonical)."""
+    uniq, inv = np.unique(coords, axis=0, return_inverse=True)
+    out = np.zeros(uniq.shape[0], dtype=values.dtype)
+    np.add.at(out, inv, values)
+    return uniq.astype(np.int32), out
+
+
+def random_tensor(
+    shape: tuple[int, ...],
+    nnz: int,
+    *,
+    distribution: str = "uniform",
+    value_scale: float = 1.0,
+    seed: int = 0,
+    zipf_a: float = 1.3,
+) -> SparseTensor:
+    """Synthetic sparse tensor.
+
+    distribution:
+      "uniform"  — nonzeros spread evenly (the paper's "well-balanced",
+                   like 5D_large).
+      "powerlaw" — Zipf-distributed coordinates per mode (imbalanced, like
+                   Delicious), which stresses the partition decider.
+    """
+    rng = np.random.default_rng(seed)
+    cols = []
+    for dim in shape:
+        if distribution == "uniform":
+            c = rng.integers(0, dim, size=nnz, dtype=np.int64)
+        elif distribution == "powerlaw":
+            # Zipf over the dimension, shuffled so hot rows are scattered.
+            raw = rng.zipf(zipf_a, size=nnz) - 1
+            c = np.minimum(raw, dim - 1)
+            perm = rng.permutation(dim)
+            c = perm[c]
+        else:
+            raise ValueError(f"unknown distribution {distribution!r}")
+        cols.append(c)
+    coords = np.stack(cols, axis=1).astype(np.int32)
+    values = rng.uniform(-value_scale, value_scale, size=nnz).astype(np.float32)
+    coords, values = _dedup(coords, values)
+    return SparseTensor(coords, values, tuple(int(d) for d in shape))
+
+
+# Table I of the paper, scaled so the *relative* mode sizes and the balanced /
+# imbalanced character survive while staying CPU-runnable.  `scale` divides
+# each dimension; nnz is chosen to keep a few tens of thousands of nonzeros.
+TABLE1: dict[str, dict] = {
+    # name: (paper dims), scaled dims, nnz, distribution
+    "nell2": dict(shape=(605, 460, 1440), nnz=50_000, distribution="uniform"),
+    "nell1": dict(shape=(2900, 2100, 25500), nnz=60_000, distribution="powerlaw"),
+    "amazon": dict(shape=(4800, 1800, 1800), nnz=60_000, distribution="uniform"),
+    "delicious": dict(shape=(533, 17300, 2500, 140), nnz=40_000, distribution="powerlaw"),
+    "lbnl": dict(shape=(160, 420, 160, 420, 868), nnz=30_000, distribution="powerlaw"),
+    "5d_large": dict(shape=(10000, 1000, 3000, 4000, 500), nnz=80_000, distribution="uniform"),
+}
+
+
+def table1_tensor(name: str, *, seed: int = 0, nnz: int | None = None) -> SparseTensor:
+    spec = TABLE1[name]
+    return random_tensor(
+        tuple(spec["shape"]),
+        nnz if nnz is not None else spec["nnz"],
+        distribution=spec["distribution"],
+        seed=seed,
+    )

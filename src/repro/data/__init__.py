@@ -1,0 +1,1 @@
+from .pipeline import SyntheticTokens, SyntheticBatches, host_shard_slice

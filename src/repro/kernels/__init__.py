@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the PRISM spMTTKRP hot spot.
+
+`mttkrp_kernel` / `mttkrp_fixed_kernel` hold the pallas_call bodies,
+`ops` the jit'd public wrappers, `ref` the pure-jnp oracles.
+"""
+from .ops import mttkrp_pallas, mttkrp_fixed_pallas

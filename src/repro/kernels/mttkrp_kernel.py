@@ -1,0 +1,100 @@
+"""Pallas TPU kernel for chunked spMTTKRP (float path).
+
+TPU codesign of the PRISM "DPU program" (DESIGN.md §2):
+
+  * grid = one step per chunk *task* (the DPU analogue);
+  * the task's nonzero block (values + relative coords) is streamed
+    HBM→VMEM by the Pallas pipeline — the UPMEM *sequential readers*;
+  * the factor blocks each task needs are fetched with **data-dependent
+    BlockSpec index maps driven by scalar-prefetched `task_chunk`**: block
+    index of factor m at grid step t is `task_chunk[t, m]`.  This is the
+    chunked format's defining property (a chunk pins its factor rows) turned
+    into a hardware prefetch rule;
+  * per-nonzero gathers/scatters are re-expressed as one-hot matmuls so the
+    MXU does them (UPMEM's cheap near-memory random access has no TPU
+    equivalent; the systolic array is the TPU-native substitute);
+  * each task writes a private (S_out, R) partial block; the global sum
+    reduction happens outside the kernel — exactly where the paper puts it
+    (host-side reduction of per-DPU partials).
+
+VMEM budget per step (defaults P=256, S≤256, R≤128, f32):
+  coords (P·N·4) + values (P·4) + one-hots (2·P·S·4 ≈ 512 KB) +
+  factor blocks (N·S·R·4 ≤ 384 KB) + out (S·R·4) ≈ ~1 MB ≪ 16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mttkrp_pallas_local"]
+
+
+def _kernel(mode, input_modes, chunk_shape, n_pad_p,
+            tc_ref, coords_ref, values_ref, *refs):
+    factor_refs, out_ref = refs[:-1], refs[-1]
+    p = coords_ref.shape[1]
+    part = values_ref[0, :][:, None].astype(jnp.float32)  # (P, 1)
+    for j, m in enumerate(input_modes):
+        s_m = chunk_shape[m]
+        c = coords_ref[0, :, m]
+        onehot = (c[:, None] == lax.broadcasted_iota(jnp.int32, (p, s_m), 1))
+        rows = jnp.dot(onehot.astype(jnp.float32), factor_refs[j][...],
+                       preferred_element_type=jnp.float32)  # (P, R) on MXU
+        part = part * rows
+    s_out = chunk_shape[mode]
+    co = coords_ref[0, :, mode]
+    # Padding entries have value 0 → their scatter contribution is 0.
+    oh_out = (lax.broadcasted_iota(jnp.int32, (s_out, p), 0) == co[None, :])
+    out_ref[0] = jnp.dot(oh_out.astype(jnp.float32), part,
+                         preferred_element_type=jnp.float32)  # (S_out, R)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "chunk_shape", "interpret"))
+def mttkrp_pallas_local(
+    factors, task_chunk, coords_rel, values, *,
+    mode: int, chunk_shape: tuple[int, ...], interpret: bool = False,
+):
+    """Per-task partial MTTKRP: returns (T, S_mode, R) chunk-local blocks.
+
+    factors   : tuple of (G_m * S_m, R) f32 — rows padded to a whole number
+                of chunks (ops.py does the padding).
+    task_chunk: (T, N) int32 (scalar-prefetched — drives block fetches).
+    coords_rel: (T, P, N) int32; values: (T, P) f32.
+    """
+    n = len(factors)
+    t, p, _ = coords_rel.shape
+    rank = factors[0].shape[1]
+    input_modes = tuple(m for m in range(n) if m != mode)
+    s_out = chunk_shape[mode]
+
+    kernel = functools.partial(_kernel, mode, input_modes, chunk_shape, p)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((1, p, n), lambda i, tc: (i, 0, 0)),
+            pl.BlockSpec((1, p), lambda i, tc: (i, 0)),
+            *[
+                pl.BlockSpec(
+                    (chunk_shape[m], rank),
+                    # Data-dependent fetch: which factor block this task needs.
+                    functools.partial(lambda i, tc, m=m: (tc[i, m], 0)),
+                )
+                for m in input_modes
+            ],
+        ],
+        out_specs=pl.BlockSpec((1, s_out, rank), lambda i, tc: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, s_out, rank), jnp.float32),
+        interpret=interpret,
+    )(task_chunk, coords_rel, values, *[factors[m] for m in input_modes])

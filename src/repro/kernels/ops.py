@@ -1,0 +1,73 @@
+"""jit'd public wrappers around the Pallas MTTKRP kernels.
+
+Handles TPU-friendly padding (factor rows to whole chunks, rank to the
+128-lane boundary when compiling for real hardware) and the final global
+sum reduction, then unpads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .mttkrp_kernel import mttkrp_pallas_local
+from .mttkrp_fixed_kernel import mttkrp_fixed_pallas_local
+
+__all__ = ["mttkrp_pallas", "mttkrp_fixed_pallas", "pad_factor"]
+
+LANE = 128
+
+
+def pad_factor(f, chunk: int, *, rank_multiple: int = 1):
+    """Pad rows to a whole number of chunks and rank to `rank_multiple`."""
+    rows, rank = f.shape
+    rpad = (-rows) % chunk
+    cpad = (-rank) % rank_multiple
+    if rpad or cpad:
+        f = jnp.pad(f, ((0, rpad), (0, cpad)))
+    return f
+
+
+def mttkrp_pallas(
+    factors, task_chunk, coords_rel, values, *,
+    mode: int, chunk_shape: tuple[int, ...], out_dim: int,
+    interpret: bool = False, rank_multiple: int = 1,
+):
+    """Chunked spMTTKRP via the Pallas kernel.  Returns (out_dim, R) f32."""
+    rank = factors[0].shape[1]
+    padded = tuple(
+        pad_factor(f, chunk_shape[m], rank_multiple=rank_multiple)
+        for m, f in enumerate(factors)
+    )
+    local = mttkrp_pallas_local(
+        padded, task_chunk, coords_rel, values,
+        mode=mode, chunk_shape=chunk_shape, interpret=interpret)
+    out_pad = -(-out_dim // chunk_shape[mode]) * chunk_shape[mode]
+    out = ref.reduce_local(local, task_chunk, mode=mode,
+                           chunk_shape=chunk_shape, out_dim=out_pad)
+    return out[:out_dim, :rank]
+
+
+def mttkrp_fixed_pallas(
+    qfactors, task_chunk, coords_rel, qvalues, *,
+    mode: int, chunk_shape: tuple[int, ...], out_dim: int,
+    matrix_frac: int, value_frac: int, prec_shift: int = 0,
+    interpret: bool = False, rank_multiple: int = 1,
+):
+    """Fixed-point chunked spMTTKRP.  Returns (out_dim, R) int32 partial sums
+    in Q(·, matrix_frac - prec_shift)."""
+    rank = qfactors[0].shape[1]
+    padded = tuple(
+        pad_factor(f, chunk_shape[m], rank_multiple=rank_multiple)
+        for m, f in enumerate(qfactors)
+    )
+    local = mttkrp_fixed_pallas_local(
+        padded, task_chunk, coords_rel, qvalues,
+        mode=mode, chunk_shape=chunk_shape,
+        matrix_frac=matrix_frac, value_frac=value_frac, prec_shift=prec_shift,
+        interpret=interpret)
+    out_pad = -(-out_dim // chunk_shape[mode]) * chunk_shape[mode]
+    out = ref.reduce_local(local, task_chunk, mode=mode,
+                           chunk_shape=chunk_shape, out_dim=out_pad)
+    return out[:out_dim, :rank]

@@ -1,0 +1,372 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import — jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production mesh, record memory/cost/collective analysis for §Roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, get_config
+from ..models import LM
+from ..optim import AdamWConfig
+from ..roofline import collective_bytes, roofline_terms
+from ..roofline.model import model_flops
+from .mesh import make_production_mesh, dp_axes
+from .shardings import (batch_shardings, cache_shardings, init_shapes,
+                        opt_shardings, param_shardings)
+from .steps import (init_opt_shapes, make_ctx, make_decode_step,
+                    make_prefill_step, make_train_step)
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def input_structs(cfg, kind: str, seq: int, batch: int):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if kind in ("train", "prefill"):
+        if cfg.encoder_decoder:
+            return {
+                "frames": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                               jnp.float32),
+                "tokens": tok(batch, max(seq // cfg.dec_ratio, 16)),
+            }
+        if cfg.n_image_tokens:
+            return {
+                "tokens": tok(batch, seq - cfg.n_image_tokens),
+                "image_embeds": jax.ShapeDtypeStruct(
+                    (batch, cfg.n_image_tokens, cfg.d_model), jnp.float32),
+            }
+        return {"tokens": tok(batch, seq)}
+    raise ValueError(kind)
+
+
+def count_active_params(cfg, structs) -> float:
+    """Non-embedding params, MoE experts scaled by activated fraction."""
+    total = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(structs)[0]
+    for path, leaf in flat:
+        keys = [getattr(k, "key", "") for k in path]
+        if "embed" in keys or "unembed" in keys:
+            continue
+        n = math.prod(leaf.shape)
+        if any(k in ("wg", "wu", "wd") for k in keys) and "moe" in keys:
+            frac = (cfg.top_k) / max(cfg.n_experts, 1)
+            n *= frac
+        total += n
+    return total
+
+
+def should_skip(cfg, shape_name: str) -> str | None:
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return ("pure full attention — long_500k needs a sub-quadratic path "
+                "(DESIGN.md §5)")
+    return None
+
+
+def _lower_cell(cfg, kind, seq, batch, mesh, grad_accum):
+    """Build + lower one cell. Returns (lowered, extras dict)."""
+    lm = LM(cfg)
+    key = jax.random.key(0)
+    p_structs, p_specs = init_shapes(lm, key)
+    p_sh = param_shardings(mesh, p_structs, p_specs)
+    extras = dict(lm=lm, p_structs=p_structs)
+    if kind == "train":
+        ctx = make_ctx(mesh, seq_sharded=True)
+        opt_cfg = AdamWConfig(use_8bit=cfg.opt_8bit)
+        o_structs = init_opt_shapes(p_structs, opt_cfg)
+        o_sh = opt_shardings(mesh, o_structs, p_sh)
+        batch_structs = input_structs(cfg, "train", seq, batch)
+        b_sh = batch_shardings(mesh, batch_structs)
+        step = make_train_step(lm, ctx, opt_cfg, grad_accum=grad_accum)
+        lowered = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                          donate_argnums=(0, 1)).lower(
+            p_structs, o_structs, batch_structs)
+    elif kind == "prefill":
+        ctx = make_ctx(mesh, seq_sharded=True)
+        batch_structs = input_structs(cfg, "prefill", seq, batch)
+        b_sh = batch_shardings(mesh, batch_structs)
+        step = make_prefill_step(lm, ctx)
+        lowered = jax.jit(step, in_shardings=(p_sh, b_sh)).lower(
+            p_structs, batch_structs)
+    else:
+        ctx = make_ctx(mesh, seq_sharded=False)
+        enc_len = seq if cfg.encoder_decoder else 0
+        max_len = max(seq // cfg.dec_ratio, 448) if cfg.encoder_decoder else seq
+        c_structs = jax.eval_shape(
+            partial(lm.init_cache, batch, max_len, enc_len))
+        c_sh = cache_shardings(mesh, c_structs,
+                               long_context=seq >= 500_000)
+        tok_struct = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+        tok_sh = batch_shardings(mesh, tok_struct)
+        pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+        step = make_decode_step(lm, ctx)
+        lowered = jax.jit(
+            step, in_shardings=(p_sh, tok_sh, c_sh, NamedSharding(mesh, P())),
+            donate_argnums=(2,),
+        ).lower(p_structs, tok_struct, c_structs, pos_struct)
+    return lowered, extras
+
+
+def _cell_costs(lowered):
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    return compiled, dict(flops=float(ca.get("flops", 0.0)),
+                          bytes=float(ca.get("bytes accessed", 0.0)),
+                          wire=coll["total_wire_bytes"], coll=coll, text=text)
+
+
+def scan_correction(cfg, kind, seq, batch, mesh, grad_accum):
+    """XLA cost_analysis counts a while/scan body ONCE, not × trip count —
+    verified: scan(1) and scan(16) of the same body report identical flops.
+
+    Calibration: lower an EXACT-COST variant of the model — layer loop
+    unrolled, attention single-block (q_block=kv_block=seq), mamba/mlstm
+    single-chunk — at 1× and 2× the layer pattern.  The (flops, bytes, wire)
+    delta is the exact per-pattern-repeat cost; total = base₁ + delta ×
+    (n_layers - plen)/plen.  Remaining undercount: the sLSTM per-token scan
+    (xlstm only; documented in EXPERIMENTS.md)."""
+    import dataclasses as dc
+    plen = len(cfg.pattern)
+    mk = lambda n: dc.replace(
+        cfg, n_layers=n, unroll_stack=True,
+        n_enc_layers=(min(n, cfg.n_enc_layers)
+                      if cfg.encoder_decoder else 0))
+    _, c1 = _cell_costs(_lower_cell(mk(plen), kind, seq, batch, mesh,
+                                    grad_accum)[0])
+    _, c2 = _cell_costs(_lower_cell(mk(2 * plen), kind, seq, batch, mesh,
+                                    grad_accum)[0])
+    scale = (cfg.n_layers - plen) / plen
+
+    def correct(v_full: dict) -> dict:
+        out = {}
+        for key in ("flops", "bytes", "wire"):
+            delta = max(c2[key] - c1[key], 0.0)
+            out[key] = c1[key] + delta * scale
+        return out
+    return correct
+
+
+def inner_loop_correction(cfg, kind: str, seq: int, batch: int):
+    """Analytic add-back for costs hidden inside mixer-internal loops (the
+    flash q/kv block loops, mamba/mlstm chunk scans, sLSTM step scan), whose
+    bodies XLA counts once.  Collectives need no add-back (the mixers'
+    inner loops are collective-free by construction).  Returns GLOBAL
+    (flops, bytes); the caller divides by chip count.
+
+    mult: train = fwd(1) + remat recompute(1) + bwd(2); prefill = fwd only.
+    Decode paths have no inner loops — exact, no correction."""
+    if kind == "decode":
+        return 0.0, 0.0
+    mult = 4.0 if kind == "train" else 1.0
+    from ..models.transformer import segment_layout
+    b = batch
+    add_f, add_by = 0.0, 0.0
+
+    def attn_cost(s_q, s_kv, eff, n_heads, n_kv, dh, q_block):
+        f = 4.0 * b * s_q * eff * n_heads * dh            # QKᵀ + PV
+        nq = -(-s_q // min(q_block, s_q))
+        by = nq * s_kv * b * n_kv * dh * 2 * 2            # K,V re-read / block
+        return f, by
+
+    pattern_layers = []
+    for pat, reps in segment_layout(cfg.n_layers, cfg.pattern):
+        pattern_layers += list(pat) * reps
+    d = cfg.d_model
+    for spec in pattern_layers:
+        if spec.mixer == "attn":
+            s_q = max(seq // cfg.dec_ratio, 16) if cfg.encoder_decoder else seq
+            if spec.attn_kind == "local" and cfg.window:
+                eff = min(cfg.window, s_q)
+            elif spec.attn_kind == "chunked" and cfg.chunk_attn:
+                eff = min(cfg.chunk_attn, s_q) / 2
+            else:
+                eff = s_q / 2 if spec.causal else s_q
+            f, by = attn_cost(s_q, s_q, eff, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.head_dim, cfg.q_block)
+            add_f += mult * f
+            add_by += mult * by
+            if spec.cross_attn:
+                f, by = attn_cost(s_q, seq, seq, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.head_dim, cfg.q_block)
+                add_f += mult * f
+                add_by += mult * by
+        elif spec.mixer == "mamba":
+            di, n = 2 * d, cfg.d_state
+            add_f += mult * 10.0 * b * seq * di * n       # discretize+scan+C
+            add_by += mult * 3.0 * b * seq * di * n * 4   # chunk state IO
+        elif spec.mixer == "mlstm":
+            di = 2 * d
+            l = min(cfg.mlstm_chunk, seq)
+            add_f += mult * 4.0 * b * seq * l * di        # intra-chunk scores
+            add_by += mult * 2.0 * b * seq * l * cfg.n_heads * 4
+        elif spec.mixer == "slstm":
+            dh = d // cfg.n_heads
+            add_f += mult * b * seq * (8.0 * d * dh + 30.0 * d)
+            add_by += mult * b * seq * d * 4 * 4
+    if cfg.encoder_decoder:  # encoder stack (bidirectional full attention)
+        f, by = attn_cost(seq, seq, seq, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim, cfg.q_block)
+        add_f += cfg.n_enc_layers * mult * f
+        add_by += cfg.n_enc_layers * mult * by
+    return add_f, add_by
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = "results/dryrun", grad_accum: int = 1,
+             reduced: int | None = None, extra_tag: str = "",
+             calibrate: bool = True, optimized: bool = False) -> dict:
+    cfg = get_config(arch)
+    if optimized:  # beyond-paper §Perf variant (manual-SP MLP collectives)
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, manual_sp=True)
+        extra_tag = extra_tag or "opt"
+    sh = SHAPES[shape_name]
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = dict(arch=arch, shape=shape_name, mesh=mesh_tag)
+    skip = should_skip(cfg, shape_name)
+    if skip:
+        rec["skipped"] = skip
+        _write(out_dir, rec, extra_tag)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = math.prod(mesh.shape.values())
+    seq, batch = sh["seq"], sh["batch"]
+    if reduced:  # fast-iteration mode for perf experiments
+        seq, batch = max(seq // reduced, 128), max(batch // reduced, 1)
+    kind = sh["kind"]
+
+    t0 = time.time()
+    lowered, extras = _lower_cell(cfg, kind, seq, batch, mesh, grad_accum)
+    rec["lower_s"] = time.time() - t0
+    p_structs = extras["p_structs"]
+    n_active = count_active_params(cfg, p_structs)
+    rec["n_params"] = float(sum(math.prod(l.shape)
+                                for l in jax.tree.leaves(p_structs)))
+    rec["n_params_active_nonembed"] = float(n_active)
+    tokens = batch * seq if kind in ("train", "prefill") else batch
+    rec["model_flops"] = model_flops(
+        n_active, tokens, "train" if kind == "train" else "serve")
+
+    t0 = time.time()
+    compiled, costs = _cell_costs(lowered)
+    rec["compile_s"] = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = dict(
+        argument_bytes=mem.argument_size_in_bytes,
+        output_bytes=mem.output_size_in_bytes,
+        temp_bytes=mem.temp_size_in_bytes,
+        alias_bytes=mem.alias_size_in_bytes,
+        peak_estimate_bytes=(mem.argument_size_in_bytes
+                             + mem.output_size_in_bytes
+                             + mem.temp_size_in_bytes
+                             - mem.alias_size_in_bytes),
+    )
+    rec["cost"] = dict(per_device_flops=costs["flops"],
+                       per_device_bytes=costs["bytes"])
+    rec["collectives"] = costs["coll"]
+    from ..roofline import parse_collectives
+    top = sorted(parse_collectives(costs["text"]),
+                 key=lambda r: -r["wire_bytes"])
+    rec["top_collectives"] = top[:10]
+
+    # Scan-trip-count correction (XLA counts a while body once — calibrate
+    # with 1× and 2× pattern-length unrolled models, extrapolate linearly),
+    # plus analytic add-back of mixer-internal loop bodies.
+    flops, bytes_acc, wire = costs["flops"], costs["bytes"], costs["wire"]
+    if calibrate:
+        if cfg.n_layers > len(cfg.pattern):
+            correct = scan_correction(cfg, kind, seq, batch, mesh, grad_accum)
+            fixed = correct(costs)
+            flops, bytes_acc, wire = (fixed["flops"], fixed["bytes"],
+                                      fixed["wire"])
+        add_f, add_by = inner_loop_correction(cfg, kind, seq, batch)
+        flops += add_f / n_chips
+        bytes_acc += add_by / n_chips
+        rec["cost_scan_corrected"] = dict(
+            flops=flops, bytes=bytes_acc, wire=wire,
+            inner_loop_flops_global=add_f, inner_loop_bytes_global=add_by)
+    rec["roofline_uncorrected"] = roofline_terms(
+        costs["flops"], costs["bytes"], costs["wire"])
+    rec["roofline"] = roofline_terms(flops, bytes_acc, wire)
+    rec["useful_flops_ratio"] = (
+        rec["model_flops"] / (flops * n_chips) if flops else 0.0)
+    rec["n_chips"] = n_chips
+    _write(out_dir, rec, extra_tag)
+    return rec
+
+
+def _write(out_dir, rec, extra_tag=""):
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"__{extra_tag}" if extra_tag else ""
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{tag}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--opt", action="store_true",
+                    help="lower the beyond-paper optimized variant "
+                         "(manual-SP MLP); records tagged __opt")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}×{shape}×{'2x16x16' if mp else '16x16'}"
+                try:
+                    t0 = time.time()
+                    rec = run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                                   grad_accum=args.grad_accum,
+                                   optimized=args.opt)
+                    status = ("SKIP: " + rec["skipped"]) if "skipped" in rec \
+                        else (f"ok lower={rec['lower_s']:.0f}s "
+                              f"compile={rec['compile_s']:.0f}s "
+                              f"dominant={rec['roofline']['dominant']}")
+                    print(f"[dryrun] {tag}: {status}", flush=True)
+                except Exception as e:
+                    failures += 1
+                    print(f"[dryrun] {tag}: FAIL {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

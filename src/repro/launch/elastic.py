@@ -1,0 +1,42 @@
+"""Elastic scaling: resume a run on a different device count.
+
+At 1000+ node scale, node loss is routine; waiting for a full-size
+replacement wastes the cluster.  The recipe here: checkpoints are
+host-layout (numpy) snapshots; on restart we rebuild the mesh from the
+devices that are actually alive, recompute shardings against the new mesh,
+and re-place every array (`restore_checkpoint(..., shardings=new)`).  The
+deterministic data pipeline (seed, step, shard) makes batch boundaries
+reproducible across the re-shard, so no data server or shard registry has to
+survive the failure (straggler mitigation falls out of the same property:
+any host can recompute any shard).
+"""
+from __future__ import annotations
+
+import jax
+
+from ..checkpoint import latest_step, restore_checkpoint
+from ..optim import AdamWConfig, adamw_init
+from .mesh import make_local_mesh
+from .shardings import init_shapes, opt_shardings, param_shardings
+from .steps import init_opt_shapes
+
+__all__ = ["elastic_restore"]
+
+
+def elastic_restore(lm, ckpt_dir: str, opt_cfg: AdamWConfig,
+                    n_model: int = 1):
+    """Rebuild mesh from live devices, restore latest ckpt re-sharded to it.
+    Returns (mesh, params, opt_state, step) or None if no checkpoint."""
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None
+    mesh = make_local_mesh(n_model=n_model)
+    structs, specs = init_shapes(lm, jax.random.key(0))
+    p_sh = param_shardings(mesh, structs, specs)
+    o_sh = opt_shardings(mesh, init_opt_shapes(structs, opt_cfg), p_sh)
+    params, _ = lm.init(jax.random.key(0))
+    opt_state = adamw_init(params, opt_cfg)
+    state = restore_checkpoint(ckpt_dir, step,
+                               {"params": params, "opt": opt_state},
+                               shardings={"params": p_sh, "opt": o_sh})
+    return mesh, state["params"], state["opt"], step

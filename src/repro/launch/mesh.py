@@ -1,0 +1,37 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module constant — importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "mesh_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(n_data: int | None = None, n_model: int = 1):
+    """Whatever this host has (tests / examples / elastic resume)."""
+    n = len(jax.devices())
+    n_data = n_data or max(n // n_model, 1)
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def mesh_axes(mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Batch-parallel axes: pod (if present) + data."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

@@ -1,0 +1,164 @@
+"""Logical-axis → mesh sharding resolution.
+
+Params carry logical axis names from init ("embed", "heads", "ffn", "vocab",
+"expert", "expert_ffn", "inner"); this module resolves them against the mesh
+with divisibility checking (a non-divisible axis falls back to replication —
+e.g. whisper's vocab 51865 is not 16-divisible, so its unembed replicates).
+
+Cache shardings are path-based: KV caches shard batch over dp and sequence
+over `model` (and over `data` too for the batch-1 long_500k shape); recurrent
+states shard batch over dp and the inner dim over `model` when divisible.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes
+
+__all__ = ["LOGICAL_RULES", "param_shardings", "cache_shardings",
+           "batch_shardings", "init_shapes"]
+
+LOGICAL_RULES = {
+    "embed": "data",        # FSDP
+    "heads": "model",       # TP
+    "ffn": "model",
+    "vocab": "model",
+    "expert": "model",      # EP (the paper's rank-axis analogue)
+    "expert_ffn": "data",   # FSDP inside the MoE shard_map
+    "inner": "model",       # mamba/xlstm inner dim
+}
+
+
+def _axis_size(mesh, axis) -> int:
+    sizes = dict(mesh.shape)
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return math.prod(sizes[a] for a in axis)
+    return sizes[axis]
+
+
+def _resolve(mesh, shape, logical_axes):
+    spec, used = [], set()
+    for dim, ax in zip(shape, logical_axes):
+        mesh_ax = LOGICAL_RULES.get(ax) if ax is not None else None
+        if (mesh_ax is not None and mesh_ax not in used
+                and dim % _axis_size(mesh, mesh_ax) == 0):
+            spec.append(mesh_ax)
+            used.add(mesh_ax)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def param_shardings(mesh, param_structs, spec_tree):
+    """spec_tree leaves are tuples of logical axis names (len == ndim)."""
+    def leaf(struct, axes):
+        assert len(axes) == len(struct.shape), (struct.shape, axes)
+        return NamedSharding(mesh, _resolve(mesh, struct.shape, axes))
+    return jax.tree.map(
+        leaf, param_structs, spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+
+
+def _path_keys(path) -> tuple:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(k.key)
+        elif hasattr(k, "idx"):
+            out.append(k.idx)
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def opt_shardings(mesh, opt_structs, param_sh):
+    """Optimizer state mirrors param shardings; 8-bit q/s leaves and the step
+    counter fall back to shape-matched or replicated."""
+    flat_p = {_path_keys(path): s
+              for path, s in jax.tree_util.tree_flatten_with_path(param_sh)[0]}
+
+    def leaf(path, struct):
+        keys = _path_keys(path)
+        # state paths look like ("m", <param path...>) or ("m", ..., "q"/"s")
+        inner = keys[1:]
+        if inner and inner[-1] in ("q", "s"):
+            # 8-bit moments: q keeps the parameter's shape (last dim padded),
+            # so it inherits the parameter's sharding where divisibility
+            # still holds; scales shard like the leading param axes.
+            psh = flat_p.get(inner[:-1])
+            spec = [None] * len(struct.shape)
+            if psh is not None:
+                base = list(psh.spec) + [None] * len(struct.shape)
+                for i, dim in enumerate(struct.shape):
+                    ax = base[i] if i < len(psh.spec) else None
+                    if ax is not None and dim % _axis_size(mesh, ax) == 0:
+                        spec[i] = ax
+            return NamedSharding(mesh, P(*spec))
+        sh = flat_p.get(inner)
+        if sh is not None and len(sh.spec) == len(struct.shape):
+            return sh
+        return NamedSharding(mesh, P(*([None] * len(struct.shape))))
+    return jax.tree_util.tree_map_with_path(leaf, opt_structs)
+
+
+def batch_shardings(mesh, batch_structs):
+    dp = dp_axes(mesh)
+    def leaf(struct):
+        spec = [None] * len(struct.shape)
+        if struct.shape and struct.shape[0] % _axis_size(mesh, dp) == 0:
+            spec[0] = dp
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(leaf, batch_structs)
+
+
+def cache_shardings(mesh, cache_structs, *, long_context: bool = False):
+    """Decode-cache placement. Leaves are stacked (reps, B, ...) arrays."""
+    dp = dp_axes(mesh)
+    axes = dict(mesh.shape)
+
+    def leaf(path, struct):
+        names = [getattr(k, "key", "") for k in path]
+        shape = struct.shape
+        spec = [None] * len(shape)
+        batch_ok = len(shape) > 1 and shape[1] % _axis_size(mesh, dp) == 0
+        if "kv" in names and names[-1] in ("k", "v", "pos"):
+            # (reps, B, S, KH, hd) / pos (reps, B, S)
+            if batch_ok and not long_context:
+                spec[1] = dp
+            seq_axes = ("data", "model") if long_context else ("model",)
+            if shape[2] % _axis_size(mesh, seq_axes) == 0:
+                spec[2] = seq_axes if long_context else "model"
+        elif names[-1] in ("xk", "xv"):
+            if batch_ok:
+                spec[1] = dp
+            if shape[2] % axes.get("model", 1) == 0:
+                spec[2] = "model"
+        else:
+            # recurrent states: (reps, B, inner...) — inner over model
+            if batch_ok:
+                spec[1] = dp
+            if len(shape) > 2 and shape[2] % axes.get("model", 1) == 0:
+                spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(leaf, cache_structs)
+
+
+def init_shapes(lm, key):
+    """(param ShapeDtypeStructs, logical spec tree) without allocating."""
+    captured = {}
+
+    def f(k):
+        p, s = lm.init(k)
+        captured["specs"] = s
+        return p
+
+    structs = jax.eval_shape(f, key)
+    return structs, captured["specs"]

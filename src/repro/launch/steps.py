@@ -1,0 +1,66 @@
+"""Train / serve step builders (the functions the dry-run lowers)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..models import LM, MeshCtx
+from ..optim import AdamWConfig, adamw_init, adamw_update
+from .mesh import dp_axes
+
+__all__ = ["make_ctx", "make_train_step", "make_prefill_step",
+           "make_decode_step"]
+
+
+def make_ctx(mesh, *, seq_sharded: bool = True) -> MeshCtx:
+    return MeshCtx(mesh=mesh, dp=dp_axes(mesh), tp="model",
+                   seq_sharded=seq_sharded)
+
+
+def make_train_step(lm: LM, ctx: MeshCtx, opt_cfg: AdamWConfig,
+                    *, grad_accum: int = 1):
+    """Full step: fwd + bwd + AdamW update (+ microbatch accumulation, which
+    doubles as the compute/comm-overlap lever: per-microbatch grads start
+    reducing while the next microbatch computes)."""
+
+    def loss_fn(params, batch):
+        return lm.loss(params, ctx, batch)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (jax.tree.map(jnp.add, acc, g),), l
+            micro_batches = jax.tree.map(
+                lambda a: a.reshape((grad_accum, a.shape[0] // grad_accum)
+                                    + a.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum,), losses = jax.lax.scan(micro, (zeros,), micro_batches)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = losses.mean()
+        params, opt_state = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(lm: LM, ctx: MeshCtx):
+    def prefill_step(params, batch):
+        return lm.prefill(params, ctx, batch)
+    return prefill_step
+
+
+def make_decode_step(lm: LM, ctx: MeshCtx):
+    def decode_step(params, token, cache, pos):
+        return lm.decode_step(params, ctx, token, cache, pos)
+    return decode_step
+
+
+def init_opt_shapes(param_structs, opt_cfg: AdamWConfig):
+    return jax.eval_shape(partial(adamw_init, cfg=opt_cfg), param_structs)

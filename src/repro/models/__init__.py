@@ -1,0 +1,4 @@
+"""LM substrate: functional nn lib, attention/MoE/SSM/xLSTM mixers,
+pattern-scanned stacks, and the composable LM wrapper."""
+from .model import LM, ModelConfig, LayerSpec
+from .transformer import MeshCtx

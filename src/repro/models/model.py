@@ -1,0 +1,237 @@
+"""Model wrapper: config dataclass + LM (decoder-only / enc-dec / VLM).
+
+All ten assigned architectures instantiate this one composable definition
+(configs/<arch>.py provides the exact hyperparameters).  Modality frontends
+are stubs per the brief: `[audio]` inputs are precomputed frame embeddings,
+`[vlm]` inputs are precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .moe import MoEConfig
+from .transformer import (LayerSpec, MeshCtx, init_stack_cache, segment_layout,
+                          stack_apply, stack_decode, stack_init)
+
+__all__ = ["ModelConfig", "LM", "LayerSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | audio | vlm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int
+    # attention variants
+    window: int | None = None
+    chunk_attn: int | None = None
+    qk_norm: bool = False
+    rope: bool = True
+    nope_global: bool = False      # llama4 iRoPE: global layers have no RoPE
+    rope_theta: float = 10000.0
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    bias: bool = False
+    q_block: int = 512
+    kv_block: int = 1024
+    # layer pattern (repeats to cover n_layers; remainder truncates pattern)
+    pattern: tuple[LayerSpec, ...] = (LayerSpec(),)
+    # mlp / moe
+    mlp_act: str = "silu"
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    # ssm
+    d_state: int = 16
+    # embeddings
+    tie_embeddings: bool = False
+    scale_embed: bool = False
+    norm_eps: float = 1e-6
+    remat: bool = True
+    # enc-dec (whisper)
+    encoder_decoder: bool = False
+    n_enc_layers: int = 0
+    dec_ratio: int = 8             # decoder len = seq // dec_ratio
+    # vlm
+    n_image_tokens: int = 0
+    # frontend stubs
+    audio_frontend: bool = False
+    # dtypes / memory policy
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    opt_8bit: bool = False
+    # long-context capability (sub-quadratic path exists)
+    supports_long_context: bool = False
+    # inner-loop chunking (single-chunk + unroll_stack = exact HLO cost
+    # accounting for the dry-run calibration; see launch/dryrun.py)
+    mamba_scan_chunk: int = 512
+    mlstm_chunk: int = 256
+    unroll_stack: bool = False
+    # §Perf experiment: pin one consistent layout inside blocked attention.
+    # REFUTED as the dominant collective cost (−2 GB/layer wire but 2×
+    # bytes from model-axis replication) — see EXPERIMENTS.md §Perf; kept
+    # as a flag for the record.
+    attn_pin_layout: bool = False
+    # §Perf H11a: explicit Megatron-SP MLP collectives via shard_map
+    # (bf16 all-gather(seq) → TP matmuls → psum_scatter(seq); FSDP weight
+    # gathers in bf16).  False = paper-faithful GSPMD-implicit baseline.
+    manual_sp: bool = False
+
+    def moe_cfg(self) -> MoEConfig:
+        return MoEConfig(self.d_model, self.d_ff, self.n_experts, self.top_k,
+                         self.n_shared_experts)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+
+class LM:
+    """Pure-function model: params passed explicitly everywhere."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.segs = segment_layout(cfg.n_layers, cfg.pattern)
+        if cfg.encoder_decoder:
+            enc_spec = LayerSpec(mixer="attn", attn_kind="global",
+                                 mlp="dense", causal=False)
+            self.enc_segs = segment_layout(cfg.n_enc_layers, (enc_spec,))
+            dec_pattern = tuple(
+                dataclasses.replace(s, cross_attn=True) for s in cfg.pattern)
+            self.segs = segment_layout(cfg.n_layers, dec_pattern)
+
+    # -- init ---------------------------------------------------------------
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        p, s = {}, {}
+        p["embed"], s["embed"] = nn.embed_init(ks[0], cfg.vocab, cfg.d_model)
+        p["final_norm"], s["final_norm"] = nn.rmsnorm_init(cfg.d_model)
+        pattern = self.segs[0][0]
+        p["layers"], s["layers"], _ = stack_init(ks[1], cfg, pattern,
+                                                 cfg.n_layers)
+        if not cfg.tie_embeddings:
+            p["unembed"], s["unembed"] = nn.dense_init(
+                ks[2], cfg.d_model, cfg.vocab, axes=("embed", "vocab"),
+                scale=cfg.d_model ** -0.5)
+        if cfg.encoder_decoder:
+            enc_pattern = self.enc_segs[0][0]
+            p["enc_layers"], s["enc_layers"], _ = stack_init(
+                ks[3], cfg, enc_pattern, cfg.n_enc_layers)
+            p["enc_norm"], s["enc_norm"] = nn.rmsnorm_init(cfg.d_model)
+        if cfg.n_image_tokens:
+            p["img_proj"], s["img_proj"] = nn.dense_init(
+                ks[4], cfg.d_model, cfg.d_model, axes=("embed", None))
+        p = jax.tree.map(lambda a: a.astype(cfg.pdtype), p)
+        return p, s
+
+    # -- shared pieces --------------------------------------------------------
+
+    def _embed(self, p, tokens):
+        cfg = self.cfg
+        x = p["embed"]["w"][tokens].astype(cfg.cdtype)
+        if cfg.scale_embed:
+            x = x * math.sqrt(cfg.d_model)
+        return x
+
+    def _logits(self, p, x):
+        cfg = self.cfg
+        w = (p["embed"]["w"].T if cfg.tie_embeddings
+             else p["unembed"]["w"]).astype(x.dtype)
+        logits = x @ w
+        if cfg.final_softcap:
+            logits = nn.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+        return logits
+
+    def _encode(self, p, ctx, frames):
+        """Whisper encoder over stub frame embeddings (B, S_enc, D)."""
+        x = frames.astype(self.cfg.cdtype)
+        pos = jnp.arange(x.shape[1])
+        x = stack_apply(p["enc_layers"], self.cfg, self.enc_segs, ctx, x,
+                        positions=pos)
+        return nn.rmsnorm(p["enc_norm"], x, self.cfg.norm_eps)
+
+    def _backbone_inputs(self, p, ctx, batch):
+        """Returns (x, positions, enc_out, label_mask_offset)."""
+        cfg = self.cfg
+        if cfg.encoder_decoder:
+            enc_out = self._encode(p, ctx, batch["frames"])
+            x = self._embed(p, batch["tokens"])
+            return x, jnp.arange(x.shape[1]), enc_out
+        if cfg.n_image_tokens:
+            img = nn.linear(p["img_proj"],
+                            batch["image_embeds"].astype(cfg.cdtype))
+            tok = self._embed(p, batch["tokens"])
+            x = jnp.concatenate([img, tok], axis=1)
+            return x, jnp.arange(x.shape[1]), None
+        if cfg.audio_frontend and not cfg.encoder_decoder:
+            return batch["frames"].astype(cfg.cdtype), \
+                jnp.arange(batch["frames"].shape[1]), None
+        x = self._embed(p, batch["tokens"])
+        return x, jnp.arange(x.shape[1]), None
+
+    # -- train --------------------------------------------------------------
+
+    def loss(self, p, ctx: MeshCtx, batch):
+        cfg = self.cfg
+        x, positions, enc_out = self._backbone_inputs(p, ctx, batch)
+        x = ctx.resid(x)
+        x = stack_apply(p["layers"], cfg, self.segs, ctx, x,
+                        positions=positions, enc_out=enc_out)
+        x = nn.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+        x = ctx.shard(x, ctx.dp, None, None)
+        if cfg.n_image_tokens:  # loss only over the text tail
+            x = x[:, cfg.n_image_tokens:]
+        logits = self._logits(p, x)
+        logits = ctx.shard(logits, ctx.dp, None, ctx.tp)
+        tokens = batch["tokens"]
+        targets = tokens[:, 1:]
+        logits = logits[:, :-1].astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        true = jnp.take_along_axis(logits, targets[..., None],
+                                   axis=-1)[..., 0]
+        return jnp.mean(lse - true)
+
+    # -- serve --------------------------------------------------------------
+
+    def prefill(self, p, ctx: MeshCtx, batch):
+        """Returns last-token logits.  (Cache seeding for decode is exercised
+        through decode_step whose cache is an explicit input.)"""
+        cfg = self.cfg
+        x, positions, enc_out = self._backbone_inputs(p, ctx, batch)
+        x = ctx.resid(x)
+        x = stack_apply(p["layers"], cfg, self.segs, ctx, x,
+                        positions=positions, enc_out=enc_out)
+        x = nn.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+        return self._logits(p, x[:, -1:])
+
+    def init_cache(self, batch: int, max_len: int, enc_len: int = 0,
+                   dtype=jnp.bfloat16):
+        return init_stack_cache(self.cfg, self.segs, batch, max_len, enc_len,
+                                dtype)
+
+    def decode_step(self, p, ctx: MeshCtx, token, cache, pos):
+        """token (B,1) int32; pos scalar int32.  Returns (logits (B,V), cache)."""
+        cfg = self.cfg
+        x = self._embed(p, token)
+        x, new_cache = stack_decode(p["layers"], cfg, self.segs, ctx, x,
+                                    cache, pos)
+        x = nn.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+        logits = self._logits(p, x)[:, 0]
+        return logits, new_cache

@@ -1,0 +1,99 @@
+"""Minimal functional NN substrate: params are nested dicts of jnp arrays,
+every layer is (init, apply) pure functions.  No framework dependency.
+
+Sharding is expressed as a parallel tree of logical-axis tuples produced by
+each init alongside the params ("spec tree"); `launch/shardings.py` maps
+logical axes → mesh axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Params", "dense_init", "embed_init", "rmsnorm_init",
+    "linear", "rmsnorm", "layernorm", "apply_rope", "softcap",
+    "param_count", "tree_cast",
+]
+
+Params = dict  # nested dict of arrays
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               scale: float | None = None, axes=("in", "out"),
+               dtype=jnp.float32):
+    """Returns (params, specs). Logical axes name the sharding intent."""
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), dtype) * scale
+    p, s = {"w": w}, {"w": axes}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        s["b"] = (axes[1],)
+    return p, s
+
+
+def embed_init(key, vocab: int, d: int, *, dtype=jnp.float32):
+    w = jax.random.normal(key, (vocab, d), dtype) * 0.02
+    return {"w": w}, {"w": ("vocab", "embed")}
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype)}, {"g": (None,)}
+
+
+def linear(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + p["g"].astype(jnp.float32))).astype(dtype)
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * p["g"].astype(jnp.float32)).astype(dtype)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, H, D) rotary over last dim; positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return cap * jnp.tanh(x / cap)
+
+
+def param_count(params: Params) -> int:
+    return sum(int(np.prod(a.shape)) for a in jax.tree.leaves(params))
+
+
+def tree_cast(params: Params, dtype) -> Params:
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a,
+        params)

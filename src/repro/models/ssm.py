@@ -1,0 +1,158 @@
+"""Mamba (selective SSM) block — for the Jamba hybrid architecture.
+
+Training/prefill uses a *chunkwise* selective scan: within-chunk parallel
+(associative scan) + cross-chunk recurrent carry, so peak memory is
+O(B · chunk · d_inner · d_state) instead of O(B · S · d_inner · d_state) —
+this is what makes long_500k runnable (DESIGN.md §5).  Decode is a single
+O(1)-state update.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+
+__all__ = ["MambaConfig", "mamba_init", "mamba_apply", "mamba_decode",
+           "init_mamba_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int | None = None
+    scan_chunk: int = 512
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank_(self) -> int:
+        return self.dt_rank or max(1, self.d_model // 16)
+
+
+def mamba_init(key, cfg: MambaConfig):
+    ks = jax.random.split(key, 6)
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dt_rank_
+    p = {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), jnp.float32) * d**-0.5,
+        "conv_w": jax.random.normal(ks[1], (cfg.d_conv, di), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": jax.random.normal(ks[2], (di, r + 2 * n), jnp.float32) * di**-0.5,
+        "dt_proj": jax.random.normal(ks[3], (r, di), jnp.float32) * r**-0.5,
+        "dt_bias": jnp.log(jnp.expm1(  # init dt in [1e-3, 1e-1] (Mamba paper)
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32)
+                    * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3)))),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[5], (di, d), jnp.float32) * di**-0.5,
+    }
+    s = {
+        "in_proj": ("embed", "inner"), "conv_w": (None, "inner"),
+        "conv_b": ("inner",), "x_proj": ("inner", None),
+        "dt_proj": (None, "inner"), "dt_bias": ("inner",),
+        "a_log": ("inner", None), "d_skip": ("inner",),
+        "out_proj": ("inner", "embed"),
+    }
+    return p, s
+
+
+def _ssm_inputs(p, cfg: MambaConfig, u):
+    """u (B,S,di) post-conv. Returns dA (B,S,di,N), dBu (B,S,di,N), C (B,S,N)."""
+    r, n = cfg.dt_rank_, cfg.d_state
+    proj = u @ p["x_proj"].astype(u.dtype)
+    dt, b_ssm, c = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt @ p["dt_proj"].astype(u.dtype) + p["dt_bias"].astype(u.dtype))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, N)
+    dt32 = dt.astype(jnp.float32)
+    da = jnp.exp(dt32[..., None] * a)  # (B,S,di,N)
+    dbu = (dt32 * u.astype(jnp.float32))[..., None] * \
+        b_ssm.astype(jnp.float32)[..., None, :]
+    return da, dbu, c
+
+
+def _conv(p, cfg: MambaConfig, x, conv_state=None):
+    """Causal depthwise conv over time. x (B,S,di)."""
+    k = cfg.d_conv
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    w = p["conv_w"].astype(x.dtype)  # (K, di)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out + p["conv_b"].astype(x.dtype), xp[:, -(k - 1):]
+
+
+def mamba_apply(p, cfg: MambaConfig, x, *, h0=None, conv_state=None,
+                return_state=False, constrain=None):
+    """x (B,S,D) → (B,S,D).  Chunked selective scan.  `constrain(arr, dims)`
+    pins activation shardings (dims ∈ {"dp","tp",None} per axis) — without it
+    GSPMD falls into involuntary full rematerialization on the state einsum."""
+    if constrain is None:
+        constrain = lambda a, dims: a
+    b, s, _ = x.shape
+    xz = x @ p["in_proj"].astype(x.dtype)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, conv_out = _conv(p, cfg, u, conv_state)
+    u = jax.nn.silu(u)
+    u = constrain(u, ("dp", None, "tp"))
+
+    cc = min(cfg.scan_chunk, s)
+    pad = (-s) % cc
+    u_p = jnp.pad(u, ((0, 0), (0, pad), (0, 0))) if pad else u
+    nchunks = (s + pad) // cc
+    u_c = u_p.reshape(b, nchunks, cc, cfg.d_inner).swapaxes(0, 1)
+
+    def chunk_step(h, u_k):
+        # Discretize INSIDE the chunk: the (B,cc,di,N) dA/dBu tensors exist
+        # only per chunk, never for the full sequence (S/cc × less memory).
+        da_k, dbu_k, c_k = _ssm_inputs(p, cfg, u_k)
+        da_k = constrain(da_k, ("dp", None, "tp", None))
+        dbu_k = constrain(dbu_k, ("dp", None, "tp", None))
+        def combine(l, r):
+            return (l[0] * r[0], l[1] * r[0] + r[1])
+        a_acc, b_acc = jax.lax.associative_scan(combine, (da_k, dbu_k), axis=1)
+        hs = constrain(a_acc * h[:, None] + b_acc, ("dp", None, "tp", None))
+        y_k = jnp.einsum("bsdn,bsn->bsd", hs, c_k.astype(jnp.float32))
+        return hs[:, -1], constrain(y_k, ("dp", None, "tp"))
+
+    h0 = jnp.zeros((b, cfg.d_inner, cfg.d_state), jnp.float32) if h0 is None else h0
+    h_last, y = jax.lax.scan(jax.checkpoint(chunk_step), h0, u_c)
+    y = y.swapaxes(0, 1).reshape(b, nchunks * cc, cfg.d_inner)[:, :s]
+
+    y = y + u.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, (h_last, conv_out)
+    return out
+
+
+def init_mamba_cache(cfg: MambaConfig, batch: int, dtype=jnp.bfloat16):
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba_decode(p, cfg: MambaConfig, x, cache):
+    """Single-token step. x (B,1,D) → (B,1,D), new cache."""
+    xz = x @ p["in_proj"].astype(x.dtype)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, conv_state = _conv(p, cfg, u, cache["conv"])
+    u = jax.nn.silu(u)
+    da, dbu, c = _ssm_inputs(p, cfg, u)  # S=1
+    h = cache["h"] * da[:, 0] + dbu[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, c[:, 0].astype(jnp.float32))[:, None]
+    y = y + u.astype(jnp.float32) * p["d_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"h": h, "conv": conv_state.astype(cache["conv"].dtype)}

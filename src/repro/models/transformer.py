@@ -1,0 +1,429 @@
+"""Block composition + layer stacking.
+
+A model is a list of *segments*; each segment is a repeating pattern of
+heterogeneous blocks (e.g. gemma3 = [(local×5, global×1) ×5, (local×4) ×1];
+jamba = [(mamba×4, attn, mamba×3 with alternating MoE) ×9]).  Each segment
+lowers to ONE `lax.scan` whose body unrolls the pattern — HLO stays small
+(one pattern body per segment) regardless of depth, which keeps 72-layer
+compiles fast on the CPU dry-run host and on real TPU.
+
+Blocks are pre-norm residual: x + Mixer(LN(x)); x + MLP(LN(x)).
+The residual stream is Megatron-SP sharded (sequence over `model`) between
+blocks during train/prefill; mixers reshard internally as needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import nn
+from . import ssm, xlstm
+
+__all__ = ["LayerSpec", "MeshCtx", "block_init", "block_apply", "block_decode",
+           "stack_init", "stack_apply", "stack_decode", "init_stack_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"          # attn | mamba | mlstm | slstm
+    attn_kind: str = "global"    # global | local | chunked
+    mlp: str = "dense"           # dense | moe | none
+    cross_attn: bool = False     # enc-dec decoder blocks
+    causal: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    mesh: Any
+    dp: tuple[str, ...] = ("data",)
+    tp: str = "model"
+    seq_sharded: bool = True
+
+    def shard(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def resid(self, x):
+        sp = self.tp if self.seq_sharded else None
+        return self.shard(x, self.dp, sp, None)
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+def _attn_cfg(cfg, spec: LayerSpec) -> attn_mod.AttnConfig:
+    return attn_mod.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, causal=spec.causal,
+        window=cfg.window if spec.attn_kind == "local" else None,
+        chunk=cfg.chunk_attn if spec.attn_kind == "chunked" else None,
+        qk_norm=cfg.qk_norm,
+        rope=cfg.rope and not (spec.attn_kind == "global" and cfg.nope_global),
+        rope_theta=cfg.rope_theta, softcap=cfg.attn_softcap, bias=cfg.bias,
+        q_block=cfg.q_block, kv_block=cfg.kv_block,
+    )
+
+
+def _cross_cfg(cfg) -> attn_mod.AttnConfig:
+    return dataclasses.replace(
+        _attn_cfg(cfg, LayerSpec(causal=False)), causal=False, rope=False)
+
+
+def _mamba_cfg(cfg) -> ssm.MambaConfig:
+    return ssm.MambaConfig(d_model=cfg.d_model, d_state=cfg.d_state,
+                           scan_chunk=cfg.mamba_scan_chunk)
+
+
+def _mlp_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_act in ("gelu2", "relu2"):  # plain 2-matrix MLP (whisper/minitron)
+        p = {"w1": jax.random.normal(ks[0], (d, f), jnp.float32) * d**-0.5,
+             "w2": jax.random.normal(ks[1], (f, d), jnp.float32) * f**-0.5}
+        s = {"w1": ("embed", "ffn"), "w2": ("ffn", "embed")}
+    else:  # gated: swiglu / geglu
+        p = {"wg": jax.random.normal(ks[0], (d, f), jnp.float32) * d**-0.5,
+             "wu": jax.random.normal(ks[1], (d, f), jnp.float32) * d**-0.5,
+             "wd": jax.random.normal(ks[2], (f, d), jnp.float32) * f**-0.5}
+        s = {"wg": ("embed", "ffn"), "wu": ("embed", "ffn"),
+             "wd": ("ffn", "embed")}
+    return p, s
+
+
+def _acts(cfg):
+    acts = {"gelu": jax.nn.gelu, "gelu2": jax.nn.gelu, "geglu": jax.nn.gelu,
+            "relu2": lambda v: jnp.square(jax.nn.relu(v))}
+    return acts.get(cfg.mlp_act, jax.nn.silu)
+
+
+def _mlp_apply(p, cfg, ctx: MeshCtx, x):
+    act = _acts(cfg)
+    if cfg.mlp_act in ("gelu2", "relu2"):  # non-gated 2-matrix MLP
+        h = act(x @ p["w1"].astype(x.dtype))
+        h = ctx.shard(h, ctx.dp, None, ctx.tp)
+        return h @ p["w2"].astype(x.dtype)
+    h = act(x @ p["wg"].astype(x.dtype)) * (x @ p["wu"].astype(x.dtype))
+    h = ctx.shard(h, ctx.dp, None, ctx.tp)
+    return h @ p["wd"].astype(x.dtype)
+
+
+def _mlp_manual_sp(p, cfg, ctx: MeshCtx, h):
+    """§Perf H11a — explicit Megatron-SP MLP collectives via shard_map.
+
+    GSPMD's implicit resharding around the TP MLP emits full all-reduces of
+    (B,S,D) activations fwd AND bwd (~2/3 of the measured 29 GB/layer wire
+    on qwen3-14b).  The manual schedule is the textbook pairing:
+      fwd:  bf16 all-gather(seq) → column-parallel → row-parallel →
+            psum_scatter(seq)
+      bwd:  the exact transposes (psum_scatter ↔ all-gather), for free via
+            JAX AD through shard_map.
+    FSDP weight gathers happen in-body AFTER casting to bf16 (half wire vs
+    gathering fp32 masters).  h: (B, S, D) at P(dp, tp, None)."""
+    mesh = ctx.mesh
+    dp, tp = ctx.dp, ctx.tp
+    act = _acts(cfg)
+    gated = cfg.mlp_act not in ("gelu2", "relu2")
+    data = "data" if "data" in dict(mesh.shape) else None
+
+    def gather_w(w, axis):
+        if data is None:
+            return w
+        return jax.lax.all_gather(w, data, axis=axis, tiled=True)
+
+    if gated:
+        def body(h_loc, wg, wu, wd):
+            hf = jax.lax.all_gather(h_loc, tp, axis=1, tiled=True)
+            wg = gather_w(wg.astype(hf.dtype), 0)
+            wu = gather_w(wu.astype(hf.dtype), 0)
+            wd = gather_w(wd.astype(hf.dtype), 1)
+            inter = act(hf @ wg) * (hf @ wu)       # (B/dp, S, F/tp)
+            out = inter @ wd                        # (B/dp, S, D) partial
+            return jax.lax.psum_scatter(out, tp, scatter_dimension=1,
+                                        tiled=True)
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(dp, tp, None), P(data, tp), P(data, tp),
+                      P(tp, data)),
+            out_specs=P(dp, tp, None), check_vma=False,
+        )(h, p["wg"], p["wu"], p["wd"])
+
+    def body(h_loc, w1, w2):
+        hf = jax.lax.all_gather(h_loc, tp, axis=1, tiled=True)
+        w1 = gather_w(w1.astype(hf.dtype), 0)
+        w2 = gather_w(w2.astype(hf.dtype), 1)
+        out = act(hf @ w1) @ w2
+        return jax.lax.psum_scatter(out, tp, scatter_dimension=1, tiled=True)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp, tp, None), P(data, tp), P(tp, data)),
+        out_specs=P(dp, tp, None), check_vma=False,
+    )(h, p["w1"], p["w2"])
+
+
+def _mlp_manual_ok(cfg, ctx: MeshCtx, x) -> bool:
+    """Manual SP needs seq-sharded residuals and divisible dims."""
+    if not (cfg.manual_sp and ctx.seq_sharded and ctx.mesh is not None):
+        return False
+    axes = dict(ctx.mesh.shape)
+    tp, d_sz = axes.get(ctx.tp, 1), axes.get("data", 1)
+    b, s, d = x.shape
+    dp_sz = 1
+    for a in ctx.dp:
+        dp_sz *= axes.get(a, 1)
+    return (s % tp == 0 and b % dp_sz == 0 and cfg.d_ff % tp == 0
+            and d % d_sz == 0 and cfg.d_ff % d_sz == 0 and d % tp == 0)
+
+
+def block_init(key, cfg, spec: LayerSpec):
+    ks = jax.random.split(key, 5)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = nn.rmsnorm_init(cfg.d_model)
+    if spec.mixer == "attn":
+        p["attn"], s["attn"] = attn_mod.attn_init(ks[0], _attn_cfg(cfg, spec))
+    elif spec.mixer == "mamba":
+        p["mamba"], s["mamba"] = ssm.mamba_init(ks[0], _mamba_cfg(cfg))
+    elif spec.mixer == "mlstm":
+        p["mlstm"], s["mlstm"] = xlstm.mlstm_init(
+            ks[0], xlstm.MLSTMConfig(cfg.d_model, cfg.n_heads))
+    elif spec.mixer == "slstm":
+        p["slstm"], s["slstm"] = xlstm.slstm_init(
+            ks[0], xlstm.SLSTMConfig(cfg.d_model, cfg.n_heads))
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross_attn:
+        p["lnx"], s["lnx"] = nn.rmsnorm_init(cfg.d_model)
+        p["xattn"], s["xattn"] = attn_mod.attn_init(ks[1], _cross_cfg(cfg))
+    if spec.mlp != "none":
+        p["ln2"], s["ln2"] = nn.rmsnorm_init(cfg.d_model)
+        if spec.mlp == "moe":
+            p["moe"], s["moe"] = moe_mod.moe_init(ks[2], cfg.moe_cfg())
+        else:
+            p["mlp"], s["mlp"] = _mlp_init(ks[2], cfg)
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# Block apply (train / prefill)
+# ---------------------------------------------------------------------------
+
+def block_apply(p, cfg, spec: LayerSpec, ctx: MeshCtx, x, *, positions,
+                enc_out=None, return_cache=False):
+    h = nn.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    cache_seed = None
+
+    def constrain(arr, dims):
+        spec_ = tuple(ctx.dp if d == "dp" else (ctx.tp if d == "tp" else None)
+                      for d in dims)
+        return ctx.shard(arr, *spec_)
+
+    if spec.mixer == "attn":
+        h = ctx.shard(h, ctx.dp, None, None)  # gather seq for attention
+        out, kv = attn_mod.attention(
+            p["attn"], _attn_cfg(cfg, spec), h, positions=positions,
+            constrain=constrain if cfg.attn_pin_layout else None)
+        cache_seed = kv
+        # land the mixer output in the residual's seq-sharded layout BEFORE
+        # the add, so GSPMD turns the wo psum into a reduce-scatter (§Perf)
+        out = ctx.resid(out)
+    elif spec.mixer == "mamba":
+        h = ctx.shard(h, ctx.dp, None, None)
+        out = ssm.mamba_apply(p["mamba"], _mamba_cfg(cfg), h,
+                              constrain=constrain)
+    elif spec.mixer == "mlstm":
+        out = xlstm.mlstm_apply(
+            p["mlstm"],
+            xlstm.MLSTMConfig(cfg.d_model, cfg.n_heads, chunk=cfg.mlstm_chunk),
+            h)
+    else:
+        out = xlstm.slstm_apply(
+            p["slstm"], xlstm.SLSTMConfig(cfg.d_model, cfg.n_heads), h)
+    x = ctx.resid(x + out)
+
+    if spec.cross_attn:
+        h = nn.rmsnorm(p["lnx"], x, cfg.norm_eps)
+        h = ctx.shard(h, ctx.dp, None, None)
+        out, _ = attn_mod.attention(
+            p["xattn"], _cross_cfg(cfg), h, kv_x=enc_out,
+            positions=positions,
+            kv_positions=jnp.arange(enc_out.shape[1]))
+        x = ctx.resid(x + out)
+
+    if spec.mlp != "none":
+        h = nn.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if spec.mlp == "moe":
+            out = moe_mod.moe_apply(
+                p["moe"], cfg.moe_cfg(), h, mesh=ctx.mesh, dp_axes=ctx.dp,
+                model_axis=ctx.tp, seq_sharded=ctx.seq_sharded)
+        elif _mlp_manual_ok(cfg, ctx, h):
+            h = ctx.resid(h)  # ensure the manual schedule's input layout
+            out = _mlp_manual_sp(p["mlp"], cfg, ctx, h)
+        else:
+            out = _mlp_apply(p["mlp"], cfg, ctx, h)
+        x = ctx.resid(x + out)
+    return (x, cache_seed) if return_cache else x
+
+
+# ---------------------------------------------------------------------------
+# Block decode (single token against cache)
+# ---------------------------------------------------------------------------
+
+def init_block_cache(cfg, spec: LayerSpec, batch: int, max_len: int,
+                     enc_len: int = 0, dtype=jnp.bfloat16):
+    c = {}
+    if spec.mixer == "attn":
+        c["kv"] = attn_mod.init_kv_cache(
+            _attn_cfg(cfg, spec), batch, max_len, dtype)
+    elif spec.mixer == "mamba":
+        c["mamba"] = ssm.init_mamba_cache(_mamba_cfg(cfg), batch, dtype)
+    elif spec.mixer == "mlstm":
+        c["mlstm"] = xlstm.init_mlstm_cache(
+            xlstm.MLSTMConfig(cfg.d_model, cfg.n_heads), batch)
+    else:
+        c["slstm"] = xlstm.init_slstm_cache(
+            xlstm.SLSTMConfig(cfg.d_model, cfg.n_heads), batch)
+    if spec.cross_attn:
+        kvd = cfg.n_kv_heads * cfg.head_dim
+        c["xk"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        c["xv"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+    return c
+
+
+def block_decode(p, cfg, spec: LayerSpec, ctx: MeshCtx, x, cache, pos):
+    h = nn.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    new = dict(cache)
+    if spec.mixer == "attn":
+        out, new["kv"] = attn_mod.attn_decode(
+            p["attn"], _attn_cfg(cfg, spec), h, cache["kv"], pos)
+    elif spec.mixer == "mamba":
+        out, new["mamba"] = ssm.mamba_decode(
+            p["mamba"], _mamba_cfg(cfg), h, cache["mamba"])
+    elif spec.mixer == "mlstm":
+        out, new["mlstm"] = xlstm.mlstm_decode(
+            p["mlstm"], xlstm.MLSTMConfig(cfg.d_model, cfg.n_heads), h,
+            cache["mlstm"])
+    else:
+        out, new["slstm"] = xlstm.slstm_decode(
+            p["slstm"], xlstm.SLSTMConfig(cfg.d_model, cfg.n_heads), h,
+            cache["slstm"])
+    x = x + out
+    if spec.cross_attn:
+        h = nn.rmsnorm(p["lnx"], x, cfg.norm_eps)
+        out = attn_mod.attn_cross_decode(
+            p["xattn"], _cross_cfg(cfg), h,
+            cache["xk"].astype(x.dtype), cache["xv"].astype(x.dtype), pos)
+        x = x + out
+    if spec.mlp != "none":
+        h = nn.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if spec.mlp == "moe":
+            out = moe_mod.moe_apply(
+                p["moe"], cfg.moe_cfg(), h, mesh=ctx.mesh, dp_axes=ctx.dp,
+                model_axis=ctx.tp, seq_sharded=False)
+        else:
+            out = _mlp_apply(p["mlp"], cfg, ctx, h)
+        x = x + out
+    return x, new
+
+
+# ---------------------------------------------------------------------------
+# Stacking: segments of repeated patterns, one lax.scan per segment
+# ---------------------------------------------------------------------------
+
+def segment_layout(n_layers: int, pattern: tuple[LayerSpec, ...]):
+    """[(pattern, n_repeats), (remainder_pattern, 1)] covering n_layers."""
+    plen = len(pattern)
+    reps, rem = divmod(n_layers, plen)
+    segs = []
+    if reps:
+        segs.append((tuple(pattern), reps))
+    if rem:
+        segs.append((tuple(pattern[:rem]), 1))
+    return segs
+
+
+def stack_init(key, cfg, pattern, n_layers: int):
+    """Per segment: pytree stacked over repeats: {"b0": stacked, "b1": ...}."""
+    segs = segment_layout(n_layers, pattern)
+    params, specs = [], []
+    keys = jax.random.split(key, sum(r for _, r in segs) * len(pattern) + 1)
+    ki = 0
+    for pat, reps in segs:
+        seg_p, seg_s = {}, {}
+        for j, spec in enumerate(pat):
+            per_rep = []
+            for r in range(reps):
+                p, s = block_init(keys[ki], cfg, spec)
+                ki += 1
+                per_rep.append(p)
+            seg_p[f"b{j}"] = jax.tree.map(lambda *a: jnp.stack(a), *per_rep)
+            seg_s[f"b{j}"] = jax.tree.map(
+                lambda ax: (None,) + tuple(ax), s,
+                is_leaf=lambda x: isinstance(x, tuple))
+        params.append(seg_p)
+        specs.append(seg_s)
+    return params, specs, segs
+
+
+def stack_apply(params, cfg, segs, ctx: MeshCtx, x, *, positions,
+                enc_out=None):
+    for seg_p, (pat, reps) in zip(params, segs):
+        def body(x, layer_p):
+            for j, spec in enumerate(pat):
+                x = block_apply(layer_p[f"b{j}"], cfg, spec, ctx, x,
+                                positions=positions, enc_out=enc_out)
+            return x, None
+        body = jax.checkpoint(body) if cfg.remat else body
+        if cfg.unroll_stack:
+            # exact-cost mode: XLA counts a while body once, so the dry-run
+            # calibration unrolls the layer loop into straight-line HLO
+            for r in range(reps):
+                layer_p = jax.tree.map(lambda a: a[r], seg_p)
+                x, _ = body(x, layer_p)
+        else:
+            x, _ = jax.lax.scan(body, x, seg_p)
+    return x
+
+
+def init_stack_cache(cfg, segs, batch: int, max_len: int, enc_len: int = 0,
+                     dtype=jnp.bfloat16):
+    caches = []
+    for pat, reps in segs:
+        seg_c = {}
+        for j, spec in enumerate(pat):
+            one = init_block_cache(cfg, spec, batch, max_len, enc_len, dtype)
+            seg_c[f"b{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (reps,) + a.shape), one)
+        caches.append(seg_c)
+    return caches
+
+
+def stack_decode(params, cfg, segs, ctx: MeshCtx, x, caches, pos):
+    new_caches = []
+    for seg_p, seg_c, (pat, reps) in zip(params, caches, segs):
+        def body(x, pc):
+            layer_p, layer_c = pc
+            new_c = dict(layer_c)
+            for j, spec in enumerate(pat):
+                x, new_c[f"b{j}"] = block_decode(
+                    layer_p[f"b{j}"], cfg, spec, ctx, x, layer_c[f"b{j}"], pos)
+            return x, new_c
+        if cfg.unroll_stack:  # exact-cost mode (see stack_apply)
+            outs = []
+            for r in range(reps):
+                pc = jax.tree.map(lambda a: a[r], (seg_p, seg_c))
+                x, nc_r = body(x, pc)
+                outs.append(nc_r)
+            nc = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+        else:
+            x, nc = jax.lax.scan(body, x, (seg_p, seg_c))
+        new_caches.append(nc)
+    return x, new_caches

@@ -1,0 +1,276 @@
+"""xLSTM blocks: mLSTM (matrix memory, exponential gating) and sLSTM (scalar
+memory with recurrent gate preactivations) — arXiv:2405.04517.
+
+Both use the stabilized exponential-gating recurrences from the paper.  The
+parallel projections (q/k/v/gates) are computed for the whole sequence up
+front; the state recurrence runs as a `lax.scan` over time.  A chunkwise-
+parallel mLSTM formulation is the §Perf hillclimb opportunity for this arch
+(see EXPERIMENTS.md).  Decode is a single O(1)-state update — this is what
+makes long_500k decoding trivially cheap for this family.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+
+__all__ = [
+    "MLSTMConfig", "mlstm_init", "mlstm_apply", "mlstm_decode", "init_mlstm_cache",
+    "SLSTMConfig", "slstm_init", "slstm_apply", "slstm_decode", "init_slstm_cache",
+]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMConfig:
+    d_model: int
+    n_heads: int
+    proj_factor: float = 2.0
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def d_head(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+def mlstm_init(key, cfg: MLSTMConfig):
+    ks = jax.random.split(key, 8)
+    d, di = cfg.d_model, cfg.d_inner
+    p = {
+        "up": jax.random.normal(ks[0], (d, 2 * di), jnp.float32) * d**-0.5,
+        "wq": jax.random.normal(ks[1], (di, di), jnp.float32) * di**-0.5,
+        "wk": jax.random.normal(ks[2], (di, di), jnp.float32) * di**-0.5,
+        "wv": jax.random.normal(ks[3], (di, di), jnp.float32) * di**-0.5,
+        "wi": jax.random.normal(ks[4], (di, cfg.n_heads), jnp.float32) * di**-0.5,
+        "wf": jax.random.normal(ks[5], (di, cfg.n_heads), jnp.float32) * di**-0.5,
+        "fb": jnp.full((cfg.n_heads,), 3.0, jnp.float32),  # open forget gates
+        "gn": jnp.ones((di,), jnp.float32),
+        "down": jax.random.normal(ks[6], (di, d), jnp.float32) * di**-0.5,
+    }
+    s = {
+        "up": ("embed", "inner"), "wq": ("inner", "inner"),
+        "wk": ("inner", "inner"), "wv": ("inner", "inner"),
+        "wi": ("inner", None), "wf": ("inner", None), "fb": (None,),
+        "gn": ("inner",), "down": ("inner", "embed"),
+    }
+    return p, s
+
+
+def _mlstm_qkvif(p, cfg: MLSTMConfig, x):
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    up = x @ p["up"].astype(x.dtype)
+    u, z = jnp.split(up, 2, axis=-1)
+    q = (u @ p["wq"].astype(x.dtype)).reshape(b, s, h, dh) * dh**-0.5
+    k = (u @ p["wk"].astype(x.dtype)).reshape(b, s, h, dh) * dh**-0.5
+    v = (u @ p["wv"].astype(x.dtype)).reshape(b, s, h, dh)
+    log_i = (u @ p["wi"].astype(x.dtype)).astype(jnp.float32)  # (B,S,H)
+    log_f = jax.nn.log_sigmoid(
+        (u @ p["wf"].astype(x.dtype)).astype(jnp.float32) + p["fb"])
+    return q, k, v, log_i, log_f, z
+
+
+def _mlstm_step(carry, xs):
+    c, n, m = carry  # (B,H,dk,dv), (B,H,dk), (B,H)
+    q, k, v, log_i, log_f = xs  # (B,H,dh) ×3, (B,H) ×2
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)[..., None]
+    f_s = jnp.exp(log_f + m - m_new)[..., None]
+    kf = k.astype(jnp.float32)
+    c = f_s[..., None] * c + i_s[..., None] * (kf[..., :, None] * v.astype(jnp.float32)[..., None, :])
+    n = f_s * n + i_s * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkv->bhv", qf, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)), 1.0)
+    return (c, n, m_new), num / den[..., None]
+
+
+def _mlstm_chunk(carry, xs):
+    """Chunkwise-parallel mLSTM (stabilized): O(L²) intra-chunk on the MXU +
+    O(1) carried (C, n, m̂) state — memory per chunk boundary only, which is
+    what makes 32k-prefill/4k-train backward fit (step-scan stores the full
+    (B,H,dk,dv) carry per token: ~TBs)."""
+    c_st, n_st, m_st = carry          # (B,H,dk,dv), (B,H,dk), (B,H)
+    q, k, v, log_i, log_f = xs        # (B,L,H,dh) ×3, (B,L,H) ×2
+    b, l, h, dh = q.shape
+    qf = q.astype(jnp.float32).transpose(0, 2, 1, 3)   # (B,H,L,dh)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    li = log_i.transpose(0, 2, 1)                      # (B,H,L)
+    g = jnp.cumsum(log_f.transpose(0, 2, 1), axis=-1)  # (B,H,L) cumulative
+    g_total = g[..., -1:]
+
+    # Stabilizers: intra max over s≤t of (g_t - g_s + i_s); inter g_t + m̂.
+    a = li - g                                          # (B,H,L) source terms
+    a_run = jax.lax.cummax(a, axis=2)
+    m_intra = g + a_run
+    m_t = jnp.maximum(m_intra, g + m_st[..., None])     # (B,H,L)
+
+    # Intra-chunk decay matrix D[t,s] = exp(g_t - g_s + i_s - m_t), s ≤ t.
+    dmat = g[..., :, None] - g[..., None, :] + li[..., None, :] \
+        - m_t[..., :, None]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    dmat = jnp.where(mask, dmat, -jnp.inf)
+    dexp = jnp.exp(dmat)                                # (B,H,L,L)
+    scores = jnp.einsum("bhtd,bhsd->bhts", qf, kf) * dexp
+    h_intra = jnp.einsum("bhts,bhsv->bhtv", scores, vf)
+    n_intra = jnp.einsum("bhts,bhsd->bhtd", dexp, kf)
+
+    # Inter-chunk (carried state) contribution.
+    w = jnp.exp(g + m_st[..., None] - m_t)              # (B,H,L)
+    h_inter = jnp.einsum("bhtd,bhdv->bhtv", qf, c_st) * w[..., None]
+    n_inter = n_st[:, :, None, :] * w[..., None]
+
+    num = h_intra + h_inter                             # (B,H,L,dv)
+    n_t = n_intra + n_inter                             # (B,H,L,dk)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhtd,bhtd->bht", qf, n_t)), 1.0)
+    y = (num / den[..., None]).transpose(0, 2, 1, 3)    # (B,L,H,dv)
+
+    # Carry update to the chunk end (stabilized by the new running max).
+    m_new = jnp.maximum(g_total[..., 0] + m_st,
+                        jnp.max(g_total - g + li, axis=-1))
+    scat = jnp.exp(g_total - g + li - m_new[..., None])  # (B,H,L)
+    c_new = jnp.exp(g_total[..., 0] + m_st - m_new)[..., None, None] * c_st \
+        + jnp.einsum("bhs,bhsd,bhsv->bhdv", scat, kf, vf)
+    n_new = jnp.exp(g_total[..., 0] + m_st - m_new)[..., None] * n_st \
+        + jnp.einsum("bhs,bhsd->bhd", scat, kf)
+    return (c_new, n_new, m_new), y
+
+
+def mlstm_apply(p, cfg: MLSTMConfig, x, *, cache=None, return_state=False):
+    """x (B,S,D) → (B,S,D).  Chunkwise-parallel scan (see _mlstm_chunk)."""
+    b, s, _ = x.shape
+    q, k, v, log_i, log_f, z = _mlstm_qkvif(p, cfg, x)
+    if cache is None:
+        cache = init_mlstm_cache(cfg, b)
+    carry = (cache["c"], cache["n"], cache["m"])
+    l = min(cfg.chunk, s)
+    pad = (-s) % l
+    if pad:
+        padf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        # keep padded forget gates at 0 decay / -inf input gate: no effect
+        q, k, v = padf(q), padf(k), padf(v)
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    nch = (s + pad) // l
+    chunked = lambda a: a.reshape(b, nch, l, *a.shape[2:]).swapaxes(0, 1)
+    (c, n, m), ys = jax.lax.scan(
+        _mlstm_chunk, carry,
+        (chunked(q), chunked(k), chunked(v), chunked(log_i), chunked(log_f)))
+    ys = ys.swapaxes(0, 1).reshape(b, nch * l, cfg.n_heads, cfg.d_head)
+    ys = ys[:, :s].reshape(b, s, cfg.d_inner).astype(x.dtype)
+    ys = nn.rmsnorm({"g": p["gn"] - 1.0}, ys)  # group-norm stand-in
+    out = (ys * jax.nn.silu(z)) @ p["down"].astype(x.dtype)
+    if return_state:
+        return out, {"c": c, "n": n, "m": m}
+    return out
+
+
+def init_mlstm_cache(cfg: MLSTMConfig, batch: int, dtype=jnp.float32):
+    h, dh = cfg.n_heads, cfg.d_head
+    return {
+        "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p, cfg: MLSTMConfig, x, cache):
+    out, state = mlstm_apply(p, cfg, x, cache=cache, return_state=True)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMConfig:
+    d_model: int
+    n_heads: int
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def slstm_init(key, cfg: SLSTMConfig):
+    ks = jax.random.split(key, 3)
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    p = {
+        "wx": jax.random.normal(ks[0], (d, 4 * d), jnp.float32) * d**-0.5,
+        # block-diagonal (per-head) recurrent weights
+        "r": jax.random.normal(ks[1], (4, h, dh, dh), jnp.float32) * dh**-0.5,
+        "b": jnp.concatenate([jnp.zeros((2 * d,)), jnp.full((d,), 3.0),
+                              jnp.zeros((d,))]).astype(jnp.float32),
+        "gn": jnp.ones((d,), jnp.float32),
+        "out": jax.random.normal(ks[2], (d, d), jnp.float32) * d**-0.5,
+    }
+    s = {"wx": ("embed", None), "r": (None, None, None, None), "b": (None,),
+         "gn": (None,), "out": ("embed", "embed")}
+    return p, s
+
+
+def _slstm_step(p, cfg, carry, x_pre):
+    """x_pre (B, 4D) precomputed input contribution to gate preactivations."""
+    c, n, m, h = carry  # (B,H,dh) ×2, (B,H) wait: c,n (B,H,dh); m (B,H,dh); h (B,H,dh)
+    b = x_pre.shape[0]
+    hh = h.reshape(b, cfg.n_heads, cfg.d_head)
+    rec = jnp.einsum("ghij,bhi->gbhj", p["r"], hh)  # (4,B,H,dh)
+    pre = x_pre.reshape(b, 4, cfg.n_heads, cfg.d_head).transpose(1, 0, 2, 3) + rec
+    z_p, i_p, f_p, o_p = pre[0], pre[1], pre[2], pre[3]
+    z = jnp.tanh(z_p)
+    o = jax.nn.sigmoid(o_p)
+    log_i = i_p
+    log_f = jax.nn.log_sigmoid(f_p)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c = f_s * c + i_s * z
+    n = f_s * n + i_s
+    h_new = (o * c / jnp.maximum(n, 1.0)).reshape(b, -1)
+    return (c, n, m_new, h_new), h_new
+
+
+def slstm_apply(p, cfg: SLSTMConfig, x, *, cache=None, return_state=False):
+    b, s, d = x.shape
+    x_pre = (x @ p["wx"].astype(x.dtype)).astype(jnp.float32) + p["b"]
+    # layout (B,S,4D) with gate-major grouping z|i|f|o
+    x_pre = x_pre.reshape(b, s, 4, d).swapaxes(0, 1).reshape(s, b, 4 * d)
+    if cache is None:
+        cache = init_slstm_cache(cfg, b)
+    carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+    step = lambda carry, xp: _slstm_step(p, cfg, carry, xp)
+    (c, n, m, h), hs = jax.lax.scan(step, carry, x_pre)
+    hs = hs.swapaxes(0, 1).astype(x.dtype)  # (B,S,D)
+    hs = nn.rmsnorm({"g": p["gn"] - 1.0}, hs)
+    out = hs @ p["out"].astype(x.dtype)
+    if return_state:
+        return out, {"c": c, "n": n, "m": m, "h": h}
+    return out
+
+
+def init_slstm_cache(cfg: SLSTMConfig, batch: int, dtype=jnp.float32):
+    h, dh = cfg.n_heads, cfg.d_head
+    return {
+        "c": jnp.zeros((batch, h, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h, dh), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, h * dh), jnp.float32),
+    }
+
+
+def slstm_decode(p, cfg: SLSTMConfig, x, cache):
+    out, state = slstm_apply(p, cfg, x, cache=cache, return_state=True)
+    return out, state

@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update
+from .cp_compress import cp_compress_state, cp_compressed_mean

@@ -1,0 +1,124 @@
+"""AdamW with optionally 8-bit-quantized moments (blockwise absmax scales).
+
+8-bit states are the distributed-optimization lever that lets jamba-398B fit
+the 256-chip pod (DESIGN.md §4): m and v are stored int8 with one fp32 scale
+per 256-element block; dequant → update → requant every step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update"]
+
+_BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    use_8bit: bool = False
+
+
+def _q8(x):
+    """int8 blockwise quantization along the LAST axis only, so the int8
+    buffer keeps the parameter's shape (up to last-dim padding) and therefore
+    its sharding — a flattened block layout would force XLA to all-gather
+    every tensor at each optimizer step (measured: ~6 TB/step on jamba).
+    Returns (q (*lead, padded_last) int8, scales (*lead, n_blocks) f32)."""
+    if x.ndim == 0:
+        x = x[None]
+    *lead, last = x.shape
+    pad = (-last) % _BLOCK
+    xp = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    blocks = xp.reshape(*lead, -1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12).astype(jnp.float32)
+    q = jnp.clip(jnp.round(blocks / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8).reshape(*lead, last + pad), scale
+
+
+def _dq8(q, scale, shape):
+    if len(shape) == 0:
+        shape = (1,)
+    *lead, last = shape
+    blocks = q.reshape(*lead, -1, _BLOCK).astype(jnp.float32) * scale[..., None]
+    return blocks.reshape(*lead, -1)[..., :last].reshape(shape)
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    if cfg.use_8bit:
+        def zeros8(p):
+            q, s = _q8(jnp.zeros(p.shape, jnp.float32))
+            return {"q": q, "s": s}
+        return {
+            "m": jax.tree.map(zeros8, params),
+            "v": jax.tree.map(zeros8, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(z, params),
+        "v": jax.tree.map(z, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig):
+    step = state["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    if cfg.use_8bit:
+        def upd(g, m8, v8, p):
+            g = g.astype(jnp.float32) * scale
+            m = _dq8(m8["q"], m8["s"], p.shape)
+            v = _dq8(v8["q"], v8["s"], p.shape)
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            # int8 v underestimates small entries (block absmax quant), which
+            # explodes m/√v — bound the step like bnb/Adafactor do.
+            u = jnp.clip(u, -4.0, 4.0)
+            u = u / jnp.maximum(1.0, jnp.sqrt(jnp.mean(u * u)))
+            newp = (p.astype(jnp.float32)
+                    - cfg.lr * (u + cfg.weight_decay * p.astype(jnp.float32)))
+            mq, ms = _q8(m)
+            vq, vs = _q8(v)
+            return newp.astype(p.dtype), {"q": mq, "s": ms}, {"q": vq, "s": vs}
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params,
+                           is_leaf=lambda x: isinstance(x, jnp.ndarray))
+        newp = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        newm = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        newv = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return newp, {"m": newm, "v": newv, "step": step}
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        newp = (p.astype(jnp.float32)
+                - cfg.lr * (u + cfg.weight_decay * p.astype(jnp.float32)))
+        return newp.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    newp = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    newm = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    newv = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return newp, {"m": newm, "v": newv, "step": step}

@@ -1,0 +1,79 @@
+"""CP-rank-R gradient compression with error feedback (beyond-paper use of
+the paper's own machinery; DESIGN.md §5.2).
+
+For a 2-D gradient G, one CP-ALS sweep IS one alternating-least-squares
+low-rank step (P ← G Q (QᵀQ)⁻¹; Q ← Gᵀ P (PᵀP)⁻¹) — the PowerSGD iteration.
+Cross-pod gradient traffic drops from |G| to R·(rows+cols) per tensor: for
+an 8192×24576 Jamba expert slice at R=16, that is ~380× fewer DCN bytes.
+
+Error feedback keeps the residual locally and re-adds it next step, which is
+the same "the iterative algorithm absorbs small per-step imprecision"
+argument the paper uses for lock removal (§IV-C).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cp_compress_state", "cp_compressed_mean", "compress_grad"]
+
+MIN_SIZE = 1 << 16  # don't compress tiny tensors
+
+
+def _as2d(g):
+    if g.ndim == 1:
+        return None
+    return g.reshape(g.shape[0], -1) if g.ndim != 2 else g
+
+
+def cp_compress_state(params, rank: int = 16, seed: int = 0):
+    """Per-tensor error-feedback buffer + fixed random right factor init."""
+    def init(path, p):
+        g2 = _as2d(jnp.zeros(p.shape))
+        if g2 is None or p.size < MIN_SIZE:
+            return None
+        key = jax.random.fold_in(jax.random.key(seed), abs(hash(str(path))) % (2**31))
+        q = jax.random.normal(key, (g2.shape[1], rank), jnp.float32)
+        return {"err": jnp.zeros(p.shape, jnp.float32), "q": q}
+    return jax.tree_util.tree_map_with_path(init, params)
+
+
+def compress_grad(g, st, axis_name: str | None):
+    """One ALS sweep (= CP-ALS on a matrix) + error feedback.  When
+    `axis_name` is given, the *factors* are psum-averaged across it instead
+    of the full gradient — that is the compressed collective."""
+    if st is None:
+        if axis_name is not None:
+            g = jax.lax.pmean(g, axis_name)
+        return g, st
+    shape = g.shape
+    gf = g.astype(jnp.float32) + st["err"]
+    g2 = _as2d(gf)
+    q = st["q"]
+    # ALS half-step 1: P = G Q, orthonormalized (stabilises like pinv(QᵀQ))
+    p = g2 @ q
+    if axis_name is not None:
+        p = jax.lax.pmean(p, axis_name)
+    p, _ = jnp.linalg.qr(p)
+    # ALS half-step 2: Q = Gᵀ P
+    q_new = g2.T @ p
+    if axis_name is not None:
+        q_new = jax.lax.pmean(q_new, axis_name)
+    approx = (p @ q_new.T).reshape(shape)
+    err = gf - approx
+    return approx.astype(g.dtype), {"err": err, "q": q_new}
+
+
+def cp_compressed_mean(grads, state, axis_name: str | None):
+    """Apply compress_grad across a grad pytree. Returns (grads, new_state)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_s = treedef.flatten_up_to(state)
+    out_g, out_s = [], []
+    for g, s in zip(flat_g, flat_s):
+        ng, ns = compress_grad(g, s, axis_name)
+        out_g.append(ng)
+        out_s.append(ns)
+    return (jax.tree_util.tree_unflatten(treedef, out_g),
+            jax.tree_util.tree_unflatten(treedef, out_s))

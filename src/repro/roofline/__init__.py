@@ -1,0 +1,2 @@
+from .hlo import collective_bytes, parse_collectives
+from .model import roofline_terms, V5E

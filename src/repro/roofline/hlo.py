@@ -1,0 +1,96 @@
+"""Collective-byte accounting from compiled HLO text.
+
+`cost_analysis()` has no collective term, so we parse the SPMD module:
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute contributes wire bytes per device computed with the
+standard ring formulas from its result shape and replica-group size.
+"""
+from __future__ import annotations
+
+import math
+import re
+
+__all__ = ["parse_collectives", "collective_bytes"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\w+\[[\d,]*\][^\s]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Sum byte sizes of every shape in a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [num_groups, group_size]<=[N...]
+        return int(m.group(2))
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> list[dict]:
+    """Per-collective records: op, result bytes, group size, wire bytes/device."""
+    out = []
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        size = _type_bytes(type_str)
+        g = _group_size(line)
+        if op == "collective-permute":
+            # permutes carry source_target_pairs, not replica_groups — the
+            # payload always crosses a link once
+            wire = float(size)
+        elif g <= 1:
+            wire = 0.0
+        elif op == "all-gather":
+            wire = size * (g - 1) / g
+        elif op == "all-reduce":
+            wire = 2.0 * size * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = size * (g - 1)          # result is already 1/g of input
+        else:  # all-to-all
+            wire = size * (g - 1) / g
+        out.append(dict(op=op, bytes=size, group=g, wire_bytes=wire))
+    return out
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    recs = parse_collectives(hlo_text)
+    by_op: dict[str, float] = {}
+    for r in recs:
+        by_op[r["op"]] = by_op.get(r["op"], 0.0) + r["wire_bytes"]
+    return {
+        "total_wire_bytes": sum(r["wire_bytes"] for r in recs),
+        "count": len(recs),
+        "by_op": by_op,
+    }

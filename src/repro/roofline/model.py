@@ -1,0 +1,46 @@
+"""Three-term roofline model for TPU v5e (targets per the brief):
+197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+cost_analysis() of an SPMD module reports PER-DEVICE flops/bytes (verified
+empirically in this repo), so each term divides by per-chip peaks directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["V5E", "roofline_terms", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HWTarget:
+    name: str
+    peak_flops: float   # per chip, bf16
+    hbm_bw: float       # bytes/s per chip
+    ici_bw: float       # bytes/s per link
+
+
+V5E = HWTarget("tpu-v5e", 197e12, 819e9, 50e9)
+
+
+def roofline_terms(per_device_flops: float, per_device_bytes: float,
+                   per_device_wire_bytes: float, hw: HWTarget = V5E) -> dict:
+    compute_s = per_device_flops / hw.peak_flops
+    memory_s = per_device_bytes / hw.hbm_bw
+    collective_s = per_device_wire_bytes / hw.ici_bw
+    terms = dict(compute_s=compute_s, memory_s=memory_s,
+                 collective_s=collective_s)
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return dict(
+        **terms,
+        dominant=dominant,
+        step_time_lower_bound_s=bound,
+        roofline_fraction=(compute_s / bound) if bound > 0 else 0.0,
+    )
+
+
+def model_flops(n_params_active: float, tokens: float,
+                kind: str = "train") -> float:
+    """MODEL_FLOPS = 6·N·D for train (fwd+bwd), 2·N·D for inference."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens

@@ -1,0 +1,76 @@
+"""Render the §Roofline table in EXPERIMENTS.md from results/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.roofline.report [--dir results/dryrun] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirpath: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r: dict) -> dict:
+    if "skipped" in r:
+        return dict(arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                    status="SKIP (full attention)")
+    ro = r["roofline"]
+    return dict(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        compute_s=f"{ro['compute_s']:.3g}",
+        memory_s=f"{ro['memory_s']:.3g}",
+        coll_s=f"{ro['collective_s']:.3g}",
+        dominant=ro["dominant"].replace("_s", ""),
+        frac=f"{ro['roofline_fraction']:.3f}",
+        useful=f"{min(r.get('useful_flops_ratio', 0), 99):.2f}",
+        hbm_gb=f"{r['memory']['peak_estimate_bytes']/1e9:.1f}",
+    )
+
+
+COLS = ["arch", "shape", "mesh", "compute_s", "memory_s", "coll_s",
+        "dominant", "frac", "useful", "hbm_gb", "status"]
+
+
+def render(recs: list[dict], md: bool = False) -> str:
+    rows = [fmt_row(r) for r in recs]
+    cols = [c for c in COLS if any(c in r for r in rows)]
+    w = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows))
+         for c in cols}
+    sep = " | " if md else " | "
+    lines = []
+    lines.append(sep.join(c.ljust(w[c]) for c in cols))
+    if md:
+        lines.insert(0, "| " + lines.pop(0) + " |")
+        lines.append("|" + "|".join("-" * (w[c] + 2) for c in cols) + "|")
+        lines[0], lines[1] = lines[0], lines[1]
+        body = ["| " + sep.join(str(r.get(c, "")).ljust(w[c]) for c in cols)
+                + " |" for r in rows]
+        return "\n".join([lines[0], lines[1]] + body)
+    lines.append("-+-".join("-" * w[c] for c in cols))
+    lines += [sep.join(str(r.get(c, "")).ljust(w[c]) for c in cols)
+              for r in rows]
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print(render(recs, md=args.md))
+    done = [r for r in recs if "skipped" not in r]
+    skipped = [r for r in recs if "skipped" in r]
+    print(f"\n{len(done)} compiled cells, {len(skipped)} documented skips")
+
+
+if __name__ == "__main__":
+    main()

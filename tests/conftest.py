@@ -1,0 +1,9 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def trivial_mesh():
+    import jax
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

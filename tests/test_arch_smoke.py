@@ -1,0 +1,99 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward loss
++ one decode step on CPU, asserting output shapes and no NaNs (the FULL
+configs are exercised only via the dry-run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import LM, MeshCtx
+
+
+@pytest.fixture(scope="module")
+def ctx(trivial_mesh):
+    return MeshCtx(mesh=trivial_mesh, dp=("data",), tp="model",
+                   seq_sharded=False)
+
+
+def _batch(cfg, b=2, s=32):
+    if cfg.encoder_decoder:
+        return {"frames": jnp.ones((b, s, cfg.d_model), jnp.float32) * 0.02,
+                "tokens": jnp.ones((b, max(s // cfg.dec_ratio, 8)), jnp.int32)}
+    if cfg.n_image_tokens:
+        return {"tokens": jnp.ones((b, s - cfg.n_image_tokens), jnp.int32),
+                "image_embeds": jnp.ones((b, cfg.n_image_tokens, cfg.d_model),
+                                         jnp.float32) * 0.02}
+    return {"tokens": jnp.ones((b, s), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_loss(arch, ctx):
+    cfg = get_smoke_config(arch)
+    lm = LM(cfg)
+    params, specs = lm.init(jax.random.key(0))
+    loss = lm.loss(params, ctx, _batch(cfg))
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch} loss not finite"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step_decreases_loss(arch, ctx):
+    from repro.launch.steps import make_train_step
+    from repro.optim import AdamWConfig, adamw_init
+    cfg = get_smoke_config(arch)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.key(0))
+    opt_cfg = AdamWConfig(lr=5e-3)
+    opt = adamw_init(params, opt_cfg)
+    step = jax.jit(make_train_step(lm, ctx, opt_cfg))
+    batch = _batch(cfg)
+    losses = []
+    for _ in range(4):
+        params, opt, loss = step(params, opt, batch)
+        losses.append(float(loss))
+    assert all(np.isfinite(l) for l in losses)
+    assert losses[-1] < losses[0], f"{arch}: {losses}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch, ctx):
+    cfg = get_smoke_config(arch)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.key(0))
+    b = 2
+    cache = lm.init_cache(b, max_len=64,
+                          enc_len=32 if cfg.encoder_decoder else 0)
+    logits, cache = lm.decode_step(params, ctx, jnp.ones((b, 1), jnp.int32),
+                                   cache, jnp.int32(3))
+    assert logits.shape == (b, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+    logits2, _ = lm.decode_step(params, ctx, jnp.ones((b, 1), jnp.int32),
+                                cache, jnp.int32(4))
+    assert bool(jnp.all(jnp.isfinite(logits2))), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The exact published hyperparameters from the assignment block."""
+    spec = {
+        "gemma3_4b": (34, 2560, 8, 4, 10240, 262144),
+        "qwen3_14b": (40, 5120, 40, 8, 17408, 151936),
+        "minitron_4b": (32, 3072, 24, 8, 9216, 256000),
+        "command_r_35b": (40, 8192, 64, 8, 22528, 256000),
+        "llama4_scout_17b_a16e": (48, 5120, 40, 8, 8192, 202048),
+        "qwen3_moe_30b_a3b": (48, 2048, 32, 4, 768, 151936),
+        "xlstm_350m": (24, 1024, 4, 4, 0, 50304),
+        "whisper_medium": (24, 1024, 16, 16, 4096, 51865),
+        "internvl2_1b": (24, 896, 14, 2, 4864, 151655),
+        "jamba_1_5_large_398b": (72, 8192, 64, 8, 24576, 65536),
+    }[arch]
+    cfg = get_config(arch)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab)
+    assert got == spec, (arch, got, spec)
+    # MoE extras
+    moe = {"llama4_scout_17b_a16e": (16, 1), "qwen3_moe_30b_a3b": (128, 8),
+           "jamba_1_5_large_398b": (16, 2)}
+    if arch in moe:
+        assert (cfg.n_experts, cfg.top_k) == moe[arch]

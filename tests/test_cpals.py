@@ -1,0 +1,134 @@
+"""CP-ALS system behaviour: convergence, engine equivalence, fixed-point and
+lock-free accuracy (paper Fig. 6 claims), qformat properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Q5_3, Q9_7, Q17_15, cp_als, fit_value, random_tensor,
+                        value_qformat)
+from repro.core.qformat import QFormat
+
+
+def _lowrank_tensor(shape, rank, nnz=None, seed=0):
+    """Fully-observed exactly-rank-R tensor in COO form (sparse CP-ALS treats
+    unobserved coords as zeros, so a partially-sampled low-rank tensor is NOT
+    low rank — all entries must be present for a high fit to be reachable)."""
+    rng = np.random.default_rng(seed)
+    factors = [rng.uniform(-1, 1, (d, rank)).astype(np.float32) for d in shape]
+    grids = np.meshgrid(*[np.arange(d) for d in shape], indexing="ij")
+    coords = np.stack([g.reshape(-1) for g in grids], 1).astype(np.int32)
+    prod = np.ones((coords.shape[0], rank), np.float32)
+    for m, f in enumerate(factors):
+        prod *= f[coords[:, m]]
+    vals = prod.sum(1).astype(np.float32)
+    from repro.core.sptensor import SparseTensor
+    return SparseTensor(coords, vals, shape)
+
+
+def test_cpals_converges_on_lowrank():
+    st_ = _lowrank_tensor((14, 10, 12), 3, seed=0)
+    res = cp_als(st_, 6, n_iters=15, engine="ref", seed=1)
+    assert res.fit_history[-1] > 0.8, res.fit_history
+    assert res.fit_history[-1] >= res.fit_history[0]
+
+
+def test_engines_agree_float():
+    st_ = random_tensor((30, 24, 36), 800, seed=2)
+    kw = dict(chunk_shape=(8, 8, 8), capacity=64)
+    r_ref = cp_als(st_, 5, n_iters=3, engine="ref", seed=3)
+    r_chu = cp_als(st_, 5, n_iters=3, engine="chunked", seed=3, **kw)
+    r_het = cp_als(st_, 5, n_iters=3, engine="hetero", seed=3,
+                   dense_fraction=0.5, **kw)
+    np.testing.assert_allclose(r_ref.fit_history, r_chu.fit_history,
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(r_ref.fit_history, r_het.fit_history,
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_fixed_point_tracks_float_convergence():
+    """Paper Fig. 6 structure: Int15-12 ≈ Float; Int7 worst but convergent.
+
+    On an exactly-low-rank tensor float converges toward 0, so Int7's
+    quantization noise floor is visible (the paper's real tensors have a
+    large model-error floor that hides it; see the fig6 benchmark for the
+    paper-style relative comparison on Table-I-like tensors)."""
+    st_ = _lowrank_tensor((12, 10, 12), 3, seed=4)
+    kw = dict(chunk_shape=(8, 8, 8), capacity=512)
+    r_f = cp_als(st_, 5, n_iters=5, engine="chunked", seed=5, **kw)
+    r_q7 = cp_als(st_, 5, n_iters=5, engine="fixed", fixed_preset="int7",
+                  seed=5, **kw)
+    r_q15 = cp_als(st_, 5, n_iters=5, engine="fixed", fixed_preset="int15-12",
+                   seed=5, **kw)
+    # Int15-12 tracks float tightly (paper: preferred for tight precision)
+    rel15 = abs(r_q15.diff_history[-1] - r_f.diff_history[-1]) / max(
+        r_f.diff_history[-1], 1e-9)
+    assert rel15 < 0.05, (r_q15.diff_history, r_f.diff_history)
+    assert abs(r_q15.fit_history[-1] - r_f.fit_history[-1]) < 0.01
+    # Int7 is the least accurate format (paper Fig. 6: highest avg-abs-diff
+    # in all cases) but remains bounded at its quantization noise floor
+    assert r_q7.diff_history[-1] >= r_q15.diff_history[-1]
+    assert r_q7.diff_history[-1] < 3 * r_q7.diff_history[0]  # bounded, no blowup
+
+
+def test_lockfree_emulation_minor_impact():
+    """Paper §V-A: removing locks does not significantly hurt convergence —
+    PREMISE: the tensor is sparse, so simultaneous same-row tasklet writes
+    are rare.  (On a dense tensor collisions are systematic and the claim
+    does not hold — which the paper's own argument predicts.)"""
+    st_ = random_tensor((30, 24, 36), 900, seed=6)
+    kw = dict(chunk_shape=(8, 8, 8), capacity=64)
+    locked = cp_als(st_, 5, n_iters=5, engine="chunked", seed=7, **kw)
+    lockfree = cp_als(st_, 5, n_iters=5, engine="chunked", seed=7,
+                      lockfree_mode=True, **kw)
+    rel = abs(lockfree.diff_history[-1] - locked.diff_history[-1]) / max(
+        locked.diff_history[-1], 1e-9)
+    # paper: "does not significantly decrease convergence, having some cases
+    # where it can even increase it" — we observe the latter (~7% better)
+    assert rel < 0.15, (lockfree.diff_history, locked.diff_history)
+
+
+def test_pallas_engine_matches_chunked():
+    st_ = random_tensor((24, 16, 24), 400, seed=8)
+    kw = dict(chunk_shape=(8, 8, 8), capacity=32)
+    r_c = cp_als(st_, 4, n_iters=2, engine="chunked", seed=9, **kw)
+    r_p = cp_als(st_, 4, n_iters=2, engine="pallas", seed=9, **kw)
+    np.testing.assert_allclose(r_c.fit_history, r_p.fit_history,
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# QFormat properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(
+    bits=st.sampled_from([(5, 3), (9, 7), (17, 15)]),
+    seed=st.integers(0, 10_000),
+)
+def test_qformat_roundtrip_error_bound(bits, seed):
+    qf = QFormat(*bits)
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 1, 256).astype(np.float32)
+    q = qf.quantize_np(x)
+    back = q.astype(np.float64) / qf.scale
+    assert np.max(np.abs(back - x)) <= 1.0 / qf.scale  # ≤ 1 ulp (round)
+    assert q.dtype == qf.np_dtype
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), vmax=st.floats(0.01, 1000.0))
+def test_value_qformat_covers_range(seed, vmax):
+    rng = np.random.default_rng(seed)
+    vals = (rng.uniform(-1, 1, 100) * vmax).astype(np.float32)
+    vq = value_qformat(vals)
+    q = vq.quantize_np(vals)
+    # no saturation beyond 1 ulp: dequantized max within one step of true max
+    back = q.astype(np.float64) / vq.scale
+    assert np.max(np.abs(back - vals)) <= 2.0 / vq.scale + 1e-6
+
+
+def test_fit_value_is_one_for_exact():
+    st_ = _lowrank_tensor((10, 12, 8), 2, seed=10)
+    res = cp_als(st_, 8, n_iters=25, engine="ref", seed=11)
+    assert res.fit_history[-1] > 0.9

@@ -1,0 +1,131 @@
+"""Distributed correctness: multi-(host-)device runs in a subprocess so the
+main pytest process keeps its single-device view (the dry-run owns the
+512-device trick; tests use 8)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(code: str, n: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_distributed_mttkrp_matches_single_device():
+    out = run_with_devices(textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np, json
+        from repro.core import random_tensor, DistributedMTTKRP
+        from repro.core.chunking import chunk_tensor
+        from repro.core.mttkrp import mttkrp_coo
+        st = random_tensor((40, 32, 48), 2000, seed=1)
+        rank = 8
+        rng = np.random.default_rng(2)
+        factors = [jnp.asarray(rng.uniform(-1,1,(d,rank)).astype(np.float32))
+                   for d in st.shape]
+        ct = chunk_tensor(st, (8, 8, 8), capacity=32)
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        errs = []
+        for reduce in ("psum", "psum_scatter"):
+            d = DistributedMTTKRP(mesh, ct, rank, reduce=reduce)
+            for mode in range(3):
+                ref = mttkrp_coo(tuple(factors), jnp.asarray(st.coords),
+                                 jnp.asarray(st.values), mode=mode,
+                                 out_dim=st.shape[mode])
+                out = np.asarray(d(factors, mode))[:st.shape[mode]]
+                errs.append(float(np.max(np.abs(out - np.asarray(ref)))))
+        print(json.dumps(errs))
+    """))
+    errs = json.loads(out.strip().splitlines()[-1])
+    assert max(errs) < 1e-3, errs
+
+
+def test_distributed_cpals_converges():
+    out = run_with_devices(textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np, json
+        from repro.core import random_tensor, cp_als, DistributedMTTKRP
+        from repro.core.chunking import chunk_tensor
+        st = random_tensor((32, 24, 40), 1500, seed=3)
+        ct = chunk_tensor(st, (8, 8, 8), capacity=64)
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        engine = DistributedMTTKRP(mesh, ct, 6, reduce="psum")
+        dist = cp_als(st, 6, n_iters=3,
+                      engine=lambda f, m: jnp.asarray(engine(f, m))[:st.shape[m]],
+                      seed=4)
+        ref = cp_als(st, 6, n_iters=3, engine="ref", seed=4)
+        print(json.dumps([dist.fit_history, ref.fit_history]))
+    """))
+    dist, ref = json.loads(out.strip().splitlines()[-1])
+    np.testing.assert_allclose(dist, ref, rtol=1e-3, atol=1e-4)
+
+
+def test_moe_ep_sharded_matches_single(trivial_mesh=None):
+    out = run_with_devices(textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np, json
+        from repro.models.moe import MoEConfig, moe_init, moe_apply
+        cfg = MoEConfig(d_model=32, d_ff=16, n_experts=8, top_k=2)
+        p, _ = moe_init(jax.random.key(0), cfg)
+        x = jax.random.normal(jax.random.key(1), (4, 16, 32)) * 0.5
+        mesh1 = jax.make_mesh((8, 1), ("data", "model"),
+                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh2 = jax.make_mesh((2, 4), ("data", "model"),
+                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        o1 = moe_apply(p, cfg, x, mesh=mesh1, seq_sharded=False)
+        o2 = moe_apply(p, cfg, x, mesh=mesh2, seq_sharded=False)
+        o3 = moe_apply(p, cfg, x, mesh=mesh2, seq_sharded=True)
+        err12 = float(jnp.max(jnp.abs(o1 - o2)))
+        err13 = float(jnp.max(jnp.abs(o1 - o3)))
+        print(json.dumps([err12, err13]))
+    """))
+    errs = json.loads(out.strip().splitlines()[-1])
+    assert max(errs) < 1e-4, errs
+
+
+def test_train_step_runs_sharded_and_checkpoint_roundtrip(tmp_path):
+    out = run_with_devices(textwrap.dedent(f"""
+        import jax, jax.numpy as jnp, numpy as np, json
+        from repro.configs import get_smoke_config
+        from repro.models import LM
+        from repro.launch.steps import make_ctx, make_train_step
+        from repro.launch.shardings import init_shapes, param_shardings
+        from repro.optim import AdamWConfig, adamw_init
+        from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        cfg = get_smoke_config("qwen3_moe_30b_a3b")
+        lm = LM(cfg)
+        ctx = make_ctx(mesh, seq_sharded=True)
+        params, _ = lm.init(jax.random.key(0))
+        structs, specs = init_shapes(lm, jax.random.key(0))
+        shardings = param_shardings(mesh, structs, specs)
+        params = jax.tree.map(jax.device_put, params, shardings)
+        opt_cfg = AdamWConfig(lr=1e-3)
+        opt = adamw_init(params, opt_cfg)
+        step = jax.jit(make_train_step(lm, ctx, opt_cfg, grad_accum=2))
+        batch = {{"tokens": jnp.ones((8, 32), jnp.int32)}}
+        params, opt, l0 = step(params, opt, batch)
+        params, opt, l1 = step(params, opt, batch)
+        save_checkpoint(r"{tmp_path}", 2, {{"params": params}})
+        st = latest_step(r"{tmp_path}")
+        restored = restore_checkpoint(r"{tmp_path}", st, {{"params": params}},
+                                      shardings={{"params": shardings}})
+        same = jax.tree.all(jax.tree.map(
+            lambda a, b: jnp.allclose(a, b), params, restored["params"]))
+        print(json.dumps([float(l0), float(l1), bool(same), st]))
+    """))
+    l0, l1, same, st = json.loads(out.strip().splitlines()[-1])
+    assert np.isfinite(l0) and np.isfinite(l1) and l1 < l0
+    assert same and st == 2

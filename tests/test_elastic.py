@@ -1,0 +1,67 @@
+"""Elastic scaling: a checkpoint written under one device count restores and
+trains correctly under a different one (launch/elastic.py)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, n: int) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_elastic_restore_across_device_counts(tmp_path):
+    # phase 1: train 2 steps on 8 devices, checkpoint
+    common = textwrap.dedent(f"""
+        import jax, jax.numpy as jnp, numpy as np, json
+        from repro.configs import get_smoke_config
+        from repro.models import LM
+        from repro.launch.steps import make_ctx, make_train_step
+        from repro.optim import AdamWConfig, adamw_init
+        cfg = get_smoke_config("qwen3_14b")
+        lm = LM(cfg)
+        opt_cfg = AdamWConfig(lr=1e-3)
+        batch = {{"tokens": jnp.ones((4, 32), jnp.int32)}}
+        ckpt_dir = r"{tmp_path}"
+    """)
+    out1 = _run(common + textwrap.dedent("""
+        from repro.launch.mesh import make_local_mesh
+        from repro.checkpoint import save_checkpoint
+        mesh = make_local_mesh(n_model=2)   # 4×2 mesh
+        ctx = make_ctx(mesh, seq_sharded=False)
+        params, _ = lm.init(jax.random.key(0))
+        opt = adamw_init(params, opt_cfg)
+        step = jax.jit(make_train_step(lm, ctx, opt_cfg))
+        for _ in range(2):
+            params, opt, loss = step(params, opt, batch)
+        save_checkpoint(ckpt_dir, 2, {"params": params, "opt": opt})
+        print(json.dumps(float(loss)))
+    """), n=8)
+    loss8 = json.loads(out1.strip().splitlines()[-1])
+
+    # phase 2: elastic_restore on 4 devices (simulating node loss), resume
+    out2 = _run(common + textwrap.dedent("""
+        from repro.launch.elastic import elastic_restore
+        mesh, params, opt, start = elastic_restore(lm, ckpt_dir, opt_cfg,
+                                                   n_model=2)  # 2×2 mesh
+        assert start == 2
+        ctx = make_ctx(mesh, seq_sharded=False)
+        step = jax.jit(make_train_step(lm, ctx, opt_cfg))
+        params, opt, loss = step(params, opt, batch)
+        print(json.dumps(float(loss)))
+    """), n=4)
+    loss4 = json.loads(out2.strip().splitlines()[-1])
+    assert np.isfinite(loss8) and np.isfinite(loss4)
+    # training continued from the restored state → loss keeps decreasing
+    assert loss4 < loss8 + 0.05

@@ -1,0 +1,89 @@
+"""Partitioner invariants (hypothesis property tests) — paper §IV-A/B."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import random_tensor, decide_partition
+from repro.core.chunking import chunk_tensor, replication_stats
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ndim=st.integers(3, 5),
+    nnz=st.integers(50, 2000),
+    seed=st.integers(0, 1000),
+    dist=st.sampled_from(["uniform", "powerlaw"]),
+)
+def test_chunking_preserves_every_nonzero(ndim, nnz, seed, dist):
+    dims = tuple(np.random.default_rng(seed).integers(8, 60, ndim))
+    st_ = random_tensor(dims, nnz, seed=seed, distribution=dist)
+    cs = tuple(max(d // 3, 1) for d in dims)
+    ct = chunk_tensor(st_, cs, capacity=16)
+    # every nonzero appears exactly once, with correct global coordinates
+    assert ct.nnz == st_.nnz
+    got = []
+    for t in range(ct.num_tasks):
+        c = int(ct.nnz_per_task[t])
+        coords = ct.coords_rel[t, :c] + ct.task_chunk[t] * np.asarray(cs)
+        for i in range(c):
+            got.append((tuple(coords[i]), float(ct.values[t, i])))
+    want = sorted((tuple(c), float(v))
+                  for c, v in zip(st_.coords, st_.values))
+    assert sorted(got) == want
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ndim=st.integers(3, 5),
+    nnz=st.integers(100, 3000),
+    cap=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 1000),
+)
+def test_capacity_respected_and_coords_in_range(ndim, nnz, cap, seed):
+    dims = tuple(np.random.default_rng(seed + 1).integers(6, 40, ndim))
+    st_ = random_tensor(dims, nnz, seed=seed, distribution="powerlaw")
+    cs = tuple(max(d // 2, 1) for d in dims)
+    ct = chunk_tensor(st_, cs, capacity=cap)
+    assert int(ct.nnz_per_task.max()) <= cap  # nonzero partitioning applied
+    for m in range(ndim):
+        assert ct.coords_rel[..., m].max() < cs[m]
+        assert ct.coords_rel.min() >= 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nnz=st.integers(100, 20_000),
+    rank=st.integers(2, 64),
+    mem_kb=st.sampled_from([4, 64, 1024]),
+    seed=st.integers(0, 100),
+)
+def test_decider_memory_budget_holds(nnz, rank, mem_kb, seed):
+    dims = tuple(np.random.default_rng(seed).integers(16, 300, 3))
+    st_ = random_tensor(dims, nnz, seed=seed)
+    plan = decide_partition(st_, rank, mem_bytes=mem_kb * 1024,
+                            n_devices=256, rank_axis=4)
+    # the plan's own accounting must respect the budget (Fig. 5 invariant)
+    assert plan.mem_bytes_per_device <= mem_kb * 1024 or plan.capacity == 1
+    assert plan.capacity >= 1
+    assert all(c >= 1 for c in plan.chunk_shape)
+    # decider drives device density to at least tensor density (balanced case)
+    if plan.capacity > 1 and all(c > 1 for c in plan.chunk_shape):
+        assert plan.device_density >= plan.tensor_density * 0.99
+
+
+def test_decider_prefers_fewer_chunks_when_memory_allows():
+    st_ = random_tensor((64, 64, 64), 1000, seed=0)
+    big = decide_partition(st_, 10, mem_bytes=64 << 20, rank_axis=1)
+    small = decide_partition(st_, 10, mem_bytes=16 << 10, rank_axis=1)
+    assert big.est_chunks <= small.est_chunks
+
+
+def test_replication_grows_with_finer_chunks():
+    st_ = random_tensor((60, 60, 60), 5000, seed=1)
+    coarse = chunk_tensor(st_, (30, 30, 30), capacity=4096)
+    fine = chunk_tensor(st_, (10, 10, 10), capacity=4096)
+    rc = replication_stats(coarse, 10, mode=0)
+    rf = replication_stats(fine, 10, mode=0)
+    assert rf["replication_factor"] >= rc["replication_factor"]

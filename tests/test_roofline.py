@@ -1,0 +1,71 @@
+"""Roofline machinery unit tests: HLO collective parsing (the §Roofline
+collective term's foundation) and the three-term model."""
+import numpy as np
+
+from repro.roofline import collective_bytes, parse_collectives, roofline_terms
+from repro.roofline.model import V5E, model_flops
+
+HLO = """
+ENTRY %main {
+  %ag = f32[128,256]{1,0} all-gather(%p0), channel_id=1, replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = bf16[64,64]{1,0} all-reduce(%p1), channel_id=2, replica_groups=[8,16]<=[128], to_apply=%sum
+  %rs = f32[32]{0} reduce-scatter(%p2), channel_id=3, replica_groups={{0,1}}, dimensions={0}
+  %a2a = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-to-all(%p3, %p4), channel_id=4, replica_groups={{0,1,2,3}}
+  %cp = u8[1024]{0} collective-permute(%p5), channel_id=5, source_target_pairs={{0,1}}
+  %ags = f32[8,8]{1,0} all-gather-start(%p6), channel_id=6, replica_groups={{0,1}}
+  %agd = f32[8,8]{1,0} all-gather-done(%ags)
+  ROOT %t = tuple()
+}
+"""
+
+
+def test_parse_collectives_ops_and_groups():
+    recs = parse_collectives(HLO)
+    ops = [r["op"] for r in recs]
+    assert ops.count("all-gather") == 2  # incl. -start; -done skipped
+    assert "all-reduce" in ops and "reduce-scatter" in ops
+    assert "all-to-all" in ops and "collective-permute" in ops
+    by_op = {}
+    for r in recs:  # keep FIRST record per op (the -start dup comes later)
+        by_op.setdefault(r["op"], r)
+    # group sizes from both replica_groups encodings
+    assert by_op["all-gather"]["group"] == 4
+    assert by_op["all-reduce"]["group"] == 16  # iota [8,16]<=[128]
+    # wire formulas
+    ag = by_op["all-gather"]
+    assert np.isclose(ag["wire_bytes"], 128 * 256 * 4 * 3 / 4)
+    ar = by_op["all-reduce"]
+    assert np.isclose(ar["wire_bytes"], 2 * 64 * 64 * 2 * 15 / 16)
+    rs = by_op["reduce-scatter"]
+    assert np.isclose(rs["wire_bytes"], 32 * 4 * 1)  # result × (g-1)
+    a2a = by_op["all-to-all"]
+    assert np.isclose(a2a["bytes"], 2 * 16 * 16 * 4)  # tuple type summed
+    cp = by_op["collective-permute"]
+    assert cp["wire_bytes"] == 1024
+
+
+def test_collective_bytes_totals():
+    agg = collective_bytes(HLO)
+    assert agg["count"] == 6
+    assert agg["total_wire_bytes"] == sum(
+        r["wire_bytes"] for r in parse_collectives(HLO))
+    assert set(agg["by_op"]) <= {"all-gather", "all-reduce", "reduce-scatter",
+                                 "all-to-all", "collective-permute"}
+
+
+def test_roofline_terms_dominance():
+    # compute-bound case
+    ro = roofline_terms(197e12, 1e9, 1e6)
+    assert ro["dominant"] == "compute_s"
+    assert np.isclose(ro["compute_s"], 1.0)
+    assert np.isclose(ro["roofline_fraction"], 1.0)
+    # collective-bound case
+    ro = roofline_terms(1e12, 1e9, 500e9)
+    assert ro["dominant"] == "collective_s"
+    assert ro["roofline_fraction"] < 0.001 or ro["roofline_fraction"] > 0
+    assert ro["step_time_lower_bound_s"] == ro["collective_s"]
+
+
+def test_model_flops_conventions():
+    assert model_flops(1e9, 1e6, "train") == 6e15
+    assert model_flops(1e9, 1e6, "serve") == 2e15
