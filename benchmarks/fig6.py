@@ -14,6 +14,7 @@ from __future__ import annotations
 import time
 
 from repro.core import avg_abs_diff, cp_als, table1_tensor
+from repro.engine import PlanCache
 
 from .common import save, table
 
@@ -29,10 +30,11 @@ def run(fast: bool = False):
     iters = 2 if fast else ITERS
     for tname in TENSORS:
         st = table1_tensor(tname, nnz=8000 if fast else None)
+        plans = PlanCache()  # all formats × lock modes share one chunking
         for fmt_name, engine, preset in FORMATS:
             for locks in (True, False):
                 kw = dict(engine=engine, seed=0, mem_bytes=256 * 1024,
-                          lockfree_mode=not locks)
+                          lockfree_mode=not locks, plans=plans)
                 if preset:
                     kw["fixed_preset"] = preset
                 t0 = time.perf_counter()

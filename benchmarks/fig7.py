@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import TABLE1, make_engine, init_factors, table1_tensor
+from repro.core import TABLE1, init_factors, table1_tensor
+from repro.engine import PlanCache, build_engine
 
 from .common import save, table, timeit
 
@@ -34,13 +35,18 @@ def run(fast: bool = False):
     if fast:
         tensors = ["nell2", "delicious"]
     engines = [("prism-chunked", "chunked"), ("prism-fixed", "fixed"),
-               ("alto-cpu", "alto"), ("coo-gpu-style", "ref")]
+               ("alto-cpu", "alto"), ("coo-gpu-style", "ref"),
+               ("autotuned", "auto")]
     for tname in tensors:
         st = table1_tensor(tname, nnz=8000 if fast else None)
         factors = [jnp.asarray(f) for f in init_factors(st.shape, RANK, 0)]
         flops = mttkrp_flops(st, RANK)
+        # One plan cache per tensor: every engine (and the autotuner's
+        # probes) shares a single chunking, as in a real CP-ALS run.
+        plans = PlanCache()
         for ename, engine in engines:
-            eng = make_engine(st, engine, RANK, mem_bytes=256 * 1024)
+            eng = build_engine(st, engine, RANK, mem_bytes=256 * 1024,
+                               plans=plans)
             per_mode = []
             for mode in range(st.ndim):
                 t = timeit(eng, factors, mode, warmup=1,
@@ -48,12 +54,13 @@ def run(fast: bool = False):
                 per_mode.append(t)
             total = sum(per_mode)
             frac = flops * st.ndim / (total * HOST_PEAK_FLOPS)
+            label = eng.name if engine == "auto" else ename
             rows.append(dict(
-                tensor=tname, engine=ename,
+                tensor=tname, engine=label,
                 time_all_modes_ms=round(total * 1e3, 2),
                 peak_fraction=f"{frac:.2e}",
             ))
-            print(f"[fig7] {tname} {ename}: {rows[-1]['time_all_modes_ms']}ms",
+            print(f"[fig7] {tname} {label}: {rows[-1]['time_all_modes_ms']}ms",
                   flush=True)
     print("\n== Fig. 7: spMTTKRP time + peak-performance fraction ==")
     print(table(rows, ["tensor", "engine", "time_all_modes_ms",

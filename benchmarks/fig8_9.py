@@ -12,7 +12,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import make_engine, init_factors, table1_tensor
+from repro.core import init_factors, table1_tensor
+from repro.engine import PlanCache, build_engine
 
 from .common import save, table, timeit
 
@@ -31,13 +32,14 @@ def run(fast: bool = False):
         st = table1_tensor(tname, nnz=6000 if fast else 12000)
         for rank in ranks:
             factors = [jnp.asarray(f) for f in init_factors(st.shape, rank, 0)]
-            base = make_engine(st, "alto", rank)
+            plans = PlanCache()  # the fraction sweep shares one chunking
+            base = build_engine(st, "alto", rank)
             t_alto = sum(timeit(base, factors, m, warmup=1, iters=1)
                          for m in range(st.ndim))
             best = None
             for frac in FRACTIONS:
-                eng = make_engine(st, "hetero", rank, mem_bytes=64 * 1024,
-                                  dense_fraction=frac)
+                eng = build_engine(st, "hetero", rank, mem_bytes=64 * 1024,
+                                   dense_fraction=frac, plans=plans)
                 t = sum(timeit(eng, factors, m, warmup=1, iters=1)
                         for m in range(st.ndim))
                 rows.append(dict(

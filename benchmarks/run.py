@@ -25,6 +25,11 @@ def main() -> None:
         "fig8_9": lambda: fig8_9.run(fast=args.fast),
     }
     only = args.only.split(",") if args.only else list(suites)
+    unknown = [n for n in only if n not in suites]
+    if unknown:
+        print(f"unknown benchmark suites: {unknown}; "
+              f"available: {sorted(suites)}", file=sys.stderr)
+        sys.exit(2)
     failed = []
     for name in only:
         print(f"\n######## benchmarks.{name} ########", flush=True)
@@ -37,7 +42,10 @@ def main() -> None:
             failed.append(name)
             traceback.print_exc()
     if failed:
-        sys.exit(f"benchmark suites failed: {failed}")
+        # Non-zero exit so CI gates on benchmark health.
+        print(f"benchmark suites failed: {failed}", file=sys.stderr)
+        sys.exit(1)
+    print(f"\nall benchmark suites passed: {only}", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,20 +1,21 @@
 """End-to-end driver #1 (the paper's kind): full CP-ALS decomposition of a
-large-ish sparse tensor with the heterogeneous (dense-MXU + sparse) engine
-and the distributed engine, with convergence tracking.
+large-ish sparse tensor through the backend registry — heterogeneous
+(dense-MXU + sparse), distributed (shard_map mesh), or the empirical
+autotuner — with convergence tracking.
 
   PYTHONPATH=src python examples/decompose_tensor.py [--tensor amazon]
-      [--rank 10] [--iters 5] [--engine hetero|chunked|fixed|distributed]
+      [--rank 10] [--iters 5]
+      [--engine auto|hetero|chunked|fixed|distributed|ref|alto|pallas]
+
+The distributed engine shards over however many devices this host exposes;
+run under XLA_FLAGS=--xla_force_host_platform_device_count=8 to see real
+sharding on a CPU host.
 """
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.core import cp_als, decide_partition, table1_tensor
-from repro.core.chunking import chunk_tensor
-from repro.core.distributed import DistributedMTTKRP
+from repro.engine import backend_table, build_engine, registered_backends
 
 
 def main():
@@ -22,8 +23,14 @@ def main():
     ap.add_argument("--tensor", default="amazon")
     ap.add_argument("--rank", type=int, default=10)
     ap.add_argument("--iters", type=int, default=5)
-    ap.add_argument("--engine", default="hetero")
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", *sorted(registered_backends())])
+    ap.add_argument("--list-backends", action="store_true")
     args = ap.parse_args()
+
+    if args.list_backends:
+        print(backend_table())
+        return
 
     st = table1_tensor(args.tensor)
     print(f"[decompose] {args.tensor}: dims={st.shape} nnz={st.nnz}")
@@ -31,25 +38,14 @@ def main():
                             rank_axis=args.rank)
     print(f"[decompose] plan: chunks={plan.chunk_shape} cap={plan.capacity}")
 
-    if args.engine == "distributed":
-        # rank partitioning on `model`, chunk/task partitioning on `data` —
-        # on this host the mesh is however many CPU devices exist (run under
-        # XLA_FLAGS=--xla_force_host_platform_device_count=8 to see sharding).
-        n = len(jax.devices())
-        mesh = jax.make_mesh(
-            (max(n // 2, 1), min(n, 2)), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        ct = chunk_tensor(st, plan.chunk_shape, plan.capacity)
-        dmt = DistributedMTTKRP(mesh, ct, args.rank, reduce="psum")
-        engine = lambda f, m: jnp.asarray(dmt(f, m))[: st.shape[m]]
-    else:
-        engine = args.engine
+    engine = build_engine(st, args.engine, args.rank,
+                          chunk_shape=plan.chunk_shape, capacity=plan.capacity)
+    if engine.report is not None:
+        print(engine.report.summary())
 
     t0 = time.time()
-    res = cp_als(st, args.rank, n_iters=args.iters, engine=engine, seed=0,
-                 chunk_shape=plan.chunk_shape, capacity=plan.capacity
-                 if args.engine != "distributed" else None)
-    print(f"[decompose] engine={args.engine} iters={args.iters} "
+    res = cp_als(st, args.rank, n_iters=args.iters, engine=engine, seed=0)
+    print(f"[decompose] engine={engine.name} iters={args.iters} "
           f"wall={time.time()-t0:.1f}s")
     for i, (f, d) in enumerate(zip(res.fit_history, res.diff_history)):
         print(f"  iter {i+1}: fit={f:+.4f} avg|X-X̂|={d:.5f}")

@@ -20,7 +20,17 @@ import numpy as np
 
 from .sptensor import SparseTensor
 
-__all__ = ["ChunkedTensor", "chunk_tensor", "replication_stats"]
+__all__ = ["ChunkedTensor", "chunk_tensor", "clamp_capacity", "replication_stats"]
+
+
+def clamp_capacity(nnz: int, capacity: int) -> int:
+    """Clamp a task capacity to [1, nnz].  Capacity above the total nonzero
+    count is pure padding — no task can ever hold more than nnz entries.
+    (The Fig.-5 decider can hand a sparse tensor a device-memory-sized
+    capacity that exceeds nnz by orders of magnitude; without the clamp
+    every task's arrays get that wide.)  Shared by chunk_tensor and the
+    engine plan cache so cache keys always agree with chunking behavior."""
+    return max(min(int(capacity), max(int(nnz), 1)), 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,7 +129,7 @@ def chunk_tensor(
     counts = np.diff(np.append(start, st.nnz))
     if capacity is None:
         capacity = int(counts.max()) if counts.size else 1
-    capacity = max(int(capacity), 1)
+    capacity = clamp_capacity(st.nnz, capacity)
 
     # Split over-full chunks into multiple tasks (nonzero partitioning).
     task_chunk, task_start, task_count = [], [], []

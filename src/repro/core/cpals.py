@@ -2,15 +2,19 @@
 
 Everything except MTTKRP — gram matrices, Hadamard products, the pseudo-
 inverse solve, normalization, convergence — runs in float on the host side,
-exactly as the paper leaves them on the CPU.  The MTTKRP engine is swappable:
+exactly as the paper leaves them on the CPU.  The MTTKRP engine is swappable
+— any name registered in `repro.engine` (see its backend registry):
 
-  engine="ref"       plain COO (paper Fig. 1 definition)
-  engine="alto"      ALTO-ordered baseline
-  engine="chunked"   PRISM chunked format (float)
-  engine="fixed"     PRISM chunked + paper Alg. 2 fixed point ("int7"/"int15-12")
-  engine="hetero"    dense(MXU)/sparse split (paper §IV-D analogue)
-  engine="pallas"    Pallas TPU kernel (kernels/ops.py), interpret on CPU
-  engine=callable    custom: f(factors, mode) -> (I_mode, R)
+  engine="ref"         plain COO (paper Fig. 1 definition)
+  engine="alto"        ALTO-ordered baseline
+  engine="chunked"     PRISM chunked format (float)
+  engine="fixed"       PRISM chunked + paper Alg. 2 fixed point ("int7"/"int15-12")
+  engine="hetero"      dense(MXU)/sparse split (paper §IV-D analogue)
+  engine="pallas"      Pallas TPU kernel (kernels/ops.py), interpret on CPU
+  engine="distributed" shard_map over a (data, model) mesh (paper §IV-B)
+  engine="auto"        empirical autotuner: measures the eligible backends
+                       per (tensor, rank, mode) and dispatches to the winner
+  engine=callable      custom: f(factors, mode) -> (I_mode, R)
 
 Normalization is L-infinity by default (paper §IV-C: uses the full [-1, 1]
 range, which fixed point needs); L2 is available for comparison.
@@ -20,16 +24,13 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
+import warnings
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import baselines, hetero, lockfree, mttkrp
-from .chunking import ChunkedTensor, chunk_tensor
-from .partition import decide_partition
-from .qformat import FIXED_PRESETS, QFormat, value_qformat
 from .sptensor import SparseTensor
 
 __all__ = [
@@ -112,106 +113,26 @@ def fit_value(st: SparseTensor, factors, lam, mlast=None, last_mode=None) -> flo
 
 
 # ---------------------------------------------------------------------------
-# Engines
+# Engines — the implementations live in repro.engine (backend registry);
+# make_engine survives as a thin deprecated shim over build_engine.
 # ---------------------------------------------------------------------------
 
 def make_engine(
     st: SparseTensor,
     method: str,
     rank: int,
-    *,
-    mem_bytes: int | None = None,
-    chunk_shape: tuple[int, ...] | None = None,
-    capacity: int | None = None,
-    fixed_preset: str = "int7",
-    lockfree_mode: bool = False,
-    dense_fraction: float | None = None,
+    **options,
 ) -> Callable:
-    """Build an MTTKRP engine closure: f(factors, mode) -> (I_mode, R) f32.
+    """DEPRECATED: use `repro.engine.build_engine` instead.
 
-    Chunk-based engines chunk the tensor ONCE (the chunked format is
-    mode-agnostic) — the tensor stays resident, only factors move per call,
-    matching the paper's rank-partitioning data-residency argument.
-    """
-    coords = jnp.asarray(st.coords)
-    values = jnp.asarray(st.values)
-
-    if method == "ref":
-        def engine(factors, mode):
-            return mttkrp.mttkrp_coo(tuple(factors), coords, values,
-                                      mode=mode, out_dim=st.shape[mode])
-        return engine
-
-    if method == "alto":
-        order = baselines.alto_order(st.coords, st.shape)
-        a_coords = jnp.asarray(st.coords[order])
-        a_values = jnp.asarray(st.values[order])
-        def engine(factors, mode):
-            return baselines.mttkrp_alto(tuple(factors), a_coords, a_values,
-                                         mode=mode, out_dim=st.shape[mode])
-        return engine
-
-    if method in ("chunked", "fixed", "hetero", "pallas"):
-        if chunk_shape is None:
-            plan = decide_partition(st, rank, mem_bytes=mem_bytes or 64 * 1024 * 1024)
-            chunk_shape = plan.chunk_shape
-            capacity = capacity or plan.capacity
-        ct = chunk_tensor(st, chunk_shape, capacity)
-        dev = mttkrp.chunked_device_arrays(ct)
-        cs, nd = ct.chunk_shape, ct.ndim
-
-        if method == "chunked":
-            mask = None
-            if lockfree_mode:
-                nnz_pt = jnp.asarray(ct.nnz_per_task)
-            def engine(factors, mode):
-                vals = dev["values"]
-                if lockfree_mode:
-                    m = lockfree.wave_collision_mask(dev["coords_rel"][:, :, mode], nnz_pt)
-                    vals = vals * m
-                return mttkrp.mttkrp_chunked(
-                    tuple(factors), dev["task_chunk"], dev["coords_rel"], vals,
-                    mode=mode, chunk_shape=cs, out_dim=st.shape[mode])
-            return engine
-
-        if method == "fixed":
-            qf, prec_shift = FIXED_PRESETS[fixed_preset]
-            vq = value_qformat(st.values, storage_bits=16)
-            qvalues = jnp.asarray(vq.quantize_np(ct.values))
-            nnz_pt = jnp.asarray(ct.nnz_per_task)
-            def engine(factors, mode):
-                qfactors = tuple(qf.quantize(f) for f in factors)
-                qvals = qvalues
-                if lockfree_mode:
-                    m = lockfree.wave_collision_mask(dev["coords_rel"][:, :, mode], nnz_pt)
-                    qvals = (qvals * m.astype(qvals.dtype))
-                qout = mttkrp.mttkrp_chunked_fixed(
-                    qfactors, dev["task_chunk"], dev["coords_rel"], qvals,
-                    mode=mode, chunk_shape=cs, out_dim=st.shape[mode],
-                    matrix_frac=qf.frac_bits, value_frac=vq.frac_bits,
-                    prec_shift=prec_shift)
-                return mttkrp.dequantize_output(qout, qf.frac_bits, prec_shift)
-            return engine
-
-        if method == "hetero":
-            split = hetero.split_tasks(ct, rank, dense_fraction=dense_fraction)
-            dense_blocks = jnp.asarray(hetero.densify_tasks(ct, split.dense_idx))
-            def engine(factors, mode):
-                return hetero.mttkrp_hetero(
-                    tuple(factors), ct, split, dense_blocks,
-                    mode=mode, out_dim=st.shape[mode])
-            return engine
-
-        if method == "pallas":
-            from ..kernels import ops as kops
-            def engine(factors, mode):
-                return kops.mttkrp_pallas(
-                    tuple(factors), dev["task_chunk"], dev["coords_rel"],
-                    dev["values"], mode=mode, chunk_shape=cs,
-                    out_dim=st.shape[mode], interpret=True)
-            return engine
-
-    raise ValueError(f"unknown engine {method!r}")
+    Builds an MTTKRP engine closure `f(factors, mode) -> (I_mode, R) f32`
+    through the backend registry (same semantics as the old if/elif ladder,
+    plus `"auto"` and `"distributed"`)."""
+    warnings.warn(
+        "make_engine is deprecated; use repro.engine.build_engine",
+        DeprecationWarning, stacklevel=2)
+    from ..engine import build_engine
+    return build_engine(st, method, rank, **options)
 
 
 # ---------------------------------------------------------------------------
@@ -233,8 +154,14 @@ def cp_als(
     n = st.ndim
     factors = init_factors(st.shape, rank, seed)
     lam = jnp.ones((rank,), jnp.float32)
-    eng = engine if callable(engine) else make_engine(st, engine, rank, **engine_kwargs)
-    eng_name = engine if isinstance(engine, str) else getattr(engine, "__name__", "custom")
+    if callable(engine):
+        eng = engine
+        eng_name = getattr(engine, "name", None) or getattr(
+            engine, "__name__", "custom")
+    else:
+        from ..engine import build_engine
+        eng = build_engine(st, engine, rank, **engine_kwargs)
+        eng_name = eng.name  # e.g. "chunked", "auto:hetero"
 
     fit_history, diff_history, iter_times = [], [], []
     prev_fit = -np.inf

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..launch.mesh import shard_map
 from .chunking import ChunkedTensor
 from .mttkrp import mttkrp_chunked
 
@@ -78,7 +79,7 @@ def distributed_mttkrp_fn(
         raise ValueError(reduce)
 
     out_rows = P(data_axis, model_axis) if reduce == "psum_scatter" else P(None, model_axis)
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(
@@ -88,7 +89,6 @@ def distributed_mttkrp_fn(
             P(data_axis, None),
         ),
         out_specs=out_rows,
-        check_vma=False,
     )
     return jax.jit(fn), out_rows
 

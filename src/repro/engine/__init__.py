@@ -1,0 +1,85 @@
+"""Unified MTTKRP engine subsystem: backend registry + plan cache +
+empirical autotuner.
+
+Public entrypoint::
+
+    from repro.engine import build_engine
+    eng = build_engine(st, "auto", rank=10)     # measured selection
+    eng = build_engine(st, "chunked", rank=10)  # explicit backend
+    out = eng(factors, mode)                    # (I_mode, R) f32
+
+`cp_als(st, rank, engine="auto")` goes through the same path.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from . import backends as _backends  # noqa: F401 — registers the built-ins
+from .autotune import AutotuneReport, autotune_engine
+from .plan import CacheStats, PlanCache, default_plan_cache
+from .registry import (
+    BackendSpec,
+    Engine,
+    EngineContext,
+    backend_table,
+    eligible_backends,
+    get_backend,
+    register_backend,
+    registered_backends,
+)
+
+__all__ = [
+    "AutotuneReport",
+    "BackendSpec",
+    "CacheStats",
+    "Engine",
+    "EngineContext",
+    "PlanCache",
+    "autotune_engine",
+    "backend_table",
+    "build_engine",
+    "default_plan_cache",
+    "eligible_backends",
+    "get_backend",
+    "register_backend",
+    "registered_backends",
+]
+
+
+def build_engine(
+    st,
+    method: str | Callable = "auto",
+    rank: int = 10,
+    *,
+    plans: PlanCache | None = None,
+    candidates: list[str] | None = None,
+    warmup: int = 1,
+    reps: int = 2,
+    autotune_modes: list[int] | None = None,
+    **options,
+) -> Engine:
+    """Build an MTTKRP engine through the registry.
+
+    method     — a registered backend name, ``"auto"`` (empirical selection
+                 over the eligible lossless backends), or a callable
+                 ``f(factors, mode)`` which is wrapped unchanged.
+    options    — EngineContext fields: mem_bytes, chunk_shape, capacity,
+                 fixed_preset, lockfree_mode, dense_fraction, mesh, reduce,
+                 interpret.
+    """
+    if callable(method):
+        return Engine(getattr(method, "__name__", "custom"), method)
+
+    ctx = EngineContext(
+        st=st, rank=rank,
+        plans=plans if plans is not None else default_plan_cache,
+        **options)
+
+    if method == "auto":
+        handle, _report = autotune_engine(
+            ctx, candidates=candidates, warmup=warmup, reps=reps,
+            modes=autotune_modes)
+        return handle
+
+    spec = get_backend(method)
+    return Engine(spec.name, spec.build(ctx), spec=spec, context=ctx)

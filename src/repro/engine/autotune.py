@@ -1,0 +1,140 @@
+"""Empirical backend autotuner (`engine="auto"`).
+
+The software analogue of the paper's PIM-vs-CPU-vs-heterogeneous decision:
+rather than predicting the winner from a model, measure it.  For each
+eligible backend the tuner runs a few warm MTTKRP calls per (tensor, rank,
+mode) — warm, because jit compilation and chunking are amortized across
+CP-ALS iterations exactly as the paper amortizes tensor placement — and
+selects the fastest backend *per mode* (the paper's finding is per-workload;
+mode changes the gather/scatter balance enough to flip winners).
+
+Lossy backends (fixed point) are excluded by default: number format is an
+accuracy choice (paper Fig. 6), execution strategy is a speed choice
+(paper Fig. 7); the tuner only makes the latter.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..core.cpals import init_factors
+from .registry import Engine, EngineContext, eligible_backends, get_backend
+
+__all__ = ["AutotuneReport", "autotune_engine"]
+
+
+@dataclasses.dataclass
+class AutotuneReport:
+    """What the tuner measured and decided."""
+
+    winners: dict[int, str]               # mode -> backend name
+    timings: dict[str, dict[int, float]]  # backend -> mode -> best seconds
+    candidates: list[str]                 # what was considered
+    skipped: dict[str, str]               # backend -> reason (error text)
+    warmup: int
+    reps: int
+
+    @property
+    def chosen(self) -> str:
+        """Single display name: the per-mode winners, deduplicated."""
+        uniq = sorted(set(self.winners.values()))
+        return uniq[0] if len(uniq) == 1 else "+".join(uniq)
+
+    def summary(self) -> str:
+        lines = [f"autotune: warmup={self.warmup} reps={self.reps}"]
+        for name, per_mode in sorted(self.timings.items()):
+            t = " ".join(f"m{m}={s * 1e3:.2f}ms" for m, s in sorted(per_mode.items()))
+            lines.append(f"  {name:12s} {t}")
+        for name, why in sorted(self.skipped.items()):
+            lines.append(f"  {name:12s} skipped: {why.splitlines()[0]}")
+        lines.append("  winners: " + " ".join(
+            f"m{m}={n}" for m, n in sorted(self.winners.items())))
+        return "\n".join(lines)
+
+
+def _time_call(engine, factors, mode: int, *, warmup: int, reps: int) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(engine(factors, mode))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(engine(factors, mode))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune_engine(
+    ctx: EngineContext,
+    *,
+    candidates: list[str] | None = None,
+    warmup: int = 1,
+    reps: int = 2,
+    modes: list[int] | None = None,
+    seed: int = 0,
+) -> tuple[Engine, AutotuneReport]:
+    """Measure every candidate backend on `ctx.st` and return a dispatching
+    engine that routes each MTTKRP mode to its measured winner.
+
+    A backend that raises during build or timing is recorded in
+    `report.skipped` and excluded — one broken strategy must not take the
+    decomposition down with it.
+    """
+    if candidates is None:
+        candidates = [n for n in eligible_backends(lossless_only=True)
+                      if n != "auto"]
+        # Interpret-mode Pallas is a simulation/verification path — orders
+        # of magnitude slower than any contender on a CPU host, so probing
+        # it just burns the tuning budget.  On real TPU (interpret=False)
+        # it competes like everyone else.  Explicit `candidates` overrides.
+        if ctx.interpret and "pallas" in candidates:
+            candidates.remove("pallas")
+    if not candidates:
+        raise ValueError("no eligible backends to autotune over")
+    if modes is None:
+        modes = list(range(ctx.st.ndim))
+
+    factors = [jnp.asarray(f) for f in init_factors(ctx.st.shape, ctx.rank, seed)]
+    built: dict[str, object] = {}
+    timings: dict[str, dict[int, float]] = {}
+    skipped: dict[str, str] = {}
+    for name in candidates:
+        try:
+            eng = get_backend(name).build(ctx)
+            per_mode = {
+                m: _time_call(eng, factors, m, warmup=warmup, reps=reps)
+                for m in modes
+            }
+        except Exception as e:  # noqa: BLE001 — any failure disqualifies
+            skipped[name] = f"{type(e).__name__}: {e}"
+            continue
+        built[name] = eng
+        timings[name] = per_mode
+
+    if not timings:
+        raise RuntimeError(
+            f"autotune: every candidate failed: {skipped}")
+
+    winners = {m: min(timings, key=lambda n: timings[n][m]) for m in modes}
+    report = AutotuneReport(
+        winners=winners, timings=timings, candidates=list(candidates),
+        skipped=skipped, warmup=warmup, reps=reps)
+
+    # Untimed modes (when `modes` was restricted) fall back to the overall
+    # fastest backend summed over the timed modes; with every mode timed the
+    # fallback is unreachable and need not be retained.
+    overall = None
+    if set(winners) != set(range(ctx.st.ndim)):
+        overall = min(timings, key=lambda n: sum(timings[n].values()))
+    # Drop losing engines so their device-resident data (reordered copies,
+    # densified blocks, ...) doesn't stay alive for the whole CP-ALS run.
+    built = {n: e for n, e in built.items()
+             if n == overall or n in winners.values()}
+
+    def engine(factors, mode):
+        return built[winners.get(mode, overall)](factors, mode)
+
+    handle = Engine(f"auto:{report.chosen}", engine, context=ctx, report=report)
+    return handle, report

@@ -1,0 +1,159 @@
+"""The built-in execution strategies, as registry backends.
+
+Each maps one of the paper's execution arms onto this host:
+
+  ref          plain COO scatter (paper Fig. 1; the "GPU/BLCO" role)
+  alto         ALTO-ordered segment-sum (the "CPU" role)
+  chunked      PRISM chunked format, float (the "PIM" role)
+  fixed        PRISM chunked + Alg.-2 fixed point (paper §IV-C)
+  hetero       dense(MXU)/sparse split (paper §IV-D collaboration)
+  pallas       the Pallas TPU kernel (interpret mode on CPU hosts)
+  distributed  shard_map over a (data, model) mesh (paper §IV-B on TPU)
+
+All chunk-based builders pull their ChunkedTensor / device arrays from the
+context's PlanCache, so building several backends against one tensor chunks
+it exactly once.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import baselines, hetero, lockfree, mttkrp
+from ..core.distributed import DistributedMTTKRP
+from ..core.qformat import FIXED_PRESETS, value_qformat
+from ..launch.mesh import make_local_mesh
+from .registry import EngineContext, register_backend
+
+__all__ = []  # backends are reached through the registry, not by import
+
+
+@register_backend(
+    "ref",
+    description="plain COO scatter-add reference (paper Fig. 1)")
+def _build_ref(ctx: EngineContext):
+    coords = jnp.asarray(ctx.st.coords)
+    values = jnp.asarray(ctx.st.values)
+    shape = ctx.st.shape
+
+    def engine(factors, mode):
+        return mttkrp.mttkrp_coo(tuple(factors), coords, values,
+                                 mode=mode, out_dim=shape[mode])
+    return engine
+
+
+@register_backend(
+    "alto",
+    description="ALTO-ordered segment-sum baseline (CPU role)")
+def _build_alto(ctx: EngineContext):
+    order = baselines.alto_order(ctx.st.coords, ctx.st.shape)
+    a_coords = jnp.asarray(ctx.st.coords[order])
+    a_values = jnp.asarray(ctx.st.values[order])
+    shape = ctx.st.shape
+
+    def engine(factors, mode):
+        return baselines.mttkrp_alto(tuple(factors), a_coords, a_values,
+                                     mode=mode, out_dim=shape[mode])
+    return engine
+
+
+@register_backend(
+    "chunked", needs_chunking=True,
+    description="PRISM chunked format, float (PIM role)")
+def _build_chunked(ctx: EngineContext):
+    ct = ctx.chunked()
+    dev = ctx.device_arrays()
+    cs, shape = ct.chunk_shape, ctx.st.shape
+    nnz_pt = jnp.asarray(ct.nnz_per_task) if ctx.lockfree_mode else None
+
+    def engine(factors, mode):
+        vals = dev["values"]
+        if nnz_pt is not None:
+            m = lockfree.wave_collision_mask(dev["coords_rel"][:, :, mode], nnz_pt)
+            vals = vals * m
+        return mttkrp.mttkrp_chunked(
+            tuple(factors), dev["task_chunk"], dev["coords_rel"], vals,
+            mode=mode, chunk_shape=cs, out_dim=shape[mode])
+    return engine
+
+
+@register_backend(
+    "fixed", needs_chunking=True, supports_fixed_point=True, lossless=False,
+    description="PRISM chunked + paper Alg. 2 fixed point (int7 / int15-12)")
+def _build_fixed(ctx: EngineContext):
+    ct = ctx.chunked()
+    dev = ctx.device_arrays()
+    cs, shape = ct.chunk_shape, ctx.st.shape
+    qf, prec_shift = FIXED_PRESETS[ctx.fixed_preset]
+    vq = value_qformat(ctx.st.values, storage_bits=16)
+    qvalues = jnp.asarray(vq.quantize_np(ct.values))
+    nnz_pt = jnp.asarray(ct.nnz_per_task) if ctx.lockfree_mode else None
+
+    def engine(factors, mode):
+        qfactors = tuple(qf.quantize(f) for f in factors)
+        qvals = qvalues
+        if nnz_pt is not None:
+            m = lockfree.wave_collision_mask(dev["coords_rel"][:, :, mode], nnz_pt)
+            qvals = qvals * m.astype(qvals.dtype)
+        qout = mttkrp.mttkrp_chunked_fixed(
+            qfactors, dev["task_chunk"], dev["coords_rel"], qvals,
+            mode=mode, chunk_shape=cs, out_dim=shape[mode],
+            matrix_frac=qf.frac_bits, value_frac=vq.frac_bits,
+            prec_shift=prec_shift)
+        return mttkrp.dequantize_output(qout, qf.frac_bits, prec_shift)
+    return engine
+
+
+@register_backend(
+    "hetero", needs_chunking=True,
+    description="dense(MXU)/sparse split, cost-model scheduled (paper §IV-D)")
+def _build_hetero(ctx: EngineContext):
+    ct = ctx.chunked()
+    split = hetero.split_tasks(ct, ctx.rank, dense_fraction=ctx.dense_fraction)
+    dense_blocks = jnp.asarray(hetero.densify_tasks(ct, split.dense_idx))
+    shape = ctx.st.shape
+
+    def engine(factors, mode):
+        return hetero.mttkrp_hetero(
+            tuple(factors), ct, split, dense_blocks,
+            mode=mode, out_dim=shape[mode])
+    return engine
+
+
+@register_backend(
+    "pallas", needs_chunking=True,
+    description="Pallas TPU kernel (interpret mode on CPU hosts)")
+def _build_pallas(ctx: EngineContext):
+    from ..kernels import ops as kops
+    ct = ctx.chunked()
+    dev = ctx.device_arrays()
+    cs, shape = ct.chunk_shape, ctx.st.shape
+    interpret = ctx.interpret
+
+    def engine(factors, mode):
+        return kops.mttkrp_pallas(
+            tuple(factors), dev["task_chunk"], dev["coords_rel"],
+            dev["values"], mode=mode, chunk_shape=cs,
+            out_dim=shape[mode], interpret=interpret)
+    return engine
+
+
+@register_backend(
+    "distributed", needs_chunking=True, min_devices=2,
+    description="shard_map mesh: rank partitioning on `model`, tasks on `data`")
+def _build_distributed(ctx: EngineContext):
+    if ctx.mesh is not None:
+        mesh = ctx.mesh
+    else:
+        # Default to a real model axis when the host allows it, so rank
+        # partitioning (the paper's favored, replication-free partitioning)
+        # is actually exercised — not just the data/task axis.
+        mesh = make_local_mesh(n_model=2 if len(jax.devices()) >= 2 else 1)
+    dmt = DistributedMTTKRP(mesh, ctx.chunked(), ctx.rank, reduce=ctx.reduce)
+    shape = ctx.st.shape
+
+    def engine(factors, mode):
+        # Materialize + trim the task-padding rows so the engine contract
+        # (exact (I_mode, R)) holds regardless of the reduction strategy.
+        return jnp.asarray(dmt(factors, mode))[: shape[mode]]
+    return engine

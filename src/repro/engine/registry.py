@@ -1,0 +1,197 @@
+"""MTTKRP backend registry.
+
+The paper's central finding is that the best spMTTKRP execution strategy is
+workload-dependent — PIM wins on some tensors, CPU/heterogeneous
+collaboration on others.  This registry is the seam where execution
+strategies plug in: each backend registers itself with a capability
+declaration, and selection (explicit name or the `auto` autotuner) goes
+through one API instead of an if/elif ladder.
+
+A backend is a *builder*: ``build(ctx: EngineContext) -> engine`` where
+``engine(factors, mode) -> (I_mode, R) f32``.  Builders run once per
+(tensor, rank, options); the returned closure serves every CP-ALS
+iteration, with chunking shared through ``ctx.plans`` (see plan.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+
+from ..core.sptensor import SparseTensor
+from .plan import PlanCache, default_plan_cache
+
+__all__ = [
+    "BackendSpec",
+    "EngineContext",
+    "Engine",
+    "register_backend",
+    "get_backend",
+    "registered_backends",
+    "eligible_backends",
+    "backend_table",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """Capability declaration for one registered execution strategy.
+
+    needs_chunking       — consumes the PRISM chunked format (built once,
+                           shared through the plan cache).
+    supports_fixed_point — runs the paper's Alg.-2 Qm.n arithmetic.
+    lossless             — bit-compatible with the float COO reference (up
+                           to reduction order); lossy backends (fixed point)
+                           are excluded from autotuning by default since
+                           format choice is an accuracy decision, not a
+                           speed decision.
+    min_devices          — minimum jax device count to be eligible.
+    """
+
+    name: str
+    build: Callable
+    needs_chunking: bool = False
+    supports_fixed_point: bool = False
+    lossless: bool = True
+    min_devices: int = 1
+    description: str = ""
+
+
+_REGISTRY: dict[str, BackendSpec] = {}
+
+
+def register_backend(
+    name: str,
+    *,
+    needs_chunking: bool = False,
+    supports_fixed_point: bool = False,
+    lossless: bool = True,
+    min_devices: int = 1,
+    description: str = "",
+):
+    """Decorator registering a builder under `name` (last wins, so tests
+    and downstream code can override a backend)."""
+    def deco(build: Callable) -> Callable:
+        _REGISTRY[name] = BackendSpec(
+            name=name,
+            build=build,
+            needs_chunking=needs_chunking,
+            supports_fixed_point=supports_fixed_point,
+            lossless=lossless,
+            min_devices=min_devices,
+            description=description,
+        )
+        return build
+    return deco
+
+
+def get_backend(name: str) -> BackendSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def registered_backends() -> dict[str, BackendSpec]:
+    return dict(_REGISTRY)
+
+
+def eligible_backends(
+    *,
+    n_devices: int | None = None,
+    lossless_only: bool = False,
+) -> list[str]:
+    """Backends whose device requirements this process satisfies."""
+    if n_devices is None:
+        n_devices = len(jax.devices())
+    return [
+        s.name
+        for s in _REGISTRY.values()
+        if n_devices >= s.min_devices and (s.lossless or not lossless_only)
+    ]
+
+
+def backend_table() -> str:
+    """Markdown capability table (used by the README and `--help` text)."""
+    rows = [
+        "| backend | chunked | fixed-point | lossless | min devices | description |",
+        "|---------|---------|-------------|----------|-------------|-------------|",
+    ]
+    for s in _REGISTRY.values():
+        rows.append(
+            f"| `{s.name}` | {'✓' if s.needs_chunking else '—'} "
+            f"| {'✓' if s.supports_fixed_point else '—'} "
+            f"| {'✓' if s.lossless else '—'} "
+            f"| {s.min_devices} | {s.description} |"
+        )
+    return "\n".join(rows)
+
+
+# ---------------------------------------------------------------------------
+# Build context + engine handle
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EngineContext:
+    """Everything a builder may need, with chunking resolved lazily ONCE.
+
+    `chunk_shape`/`capacity` default to the Fig.-5 partition decider's plan
+    for (st, rank, mem_bytes); all chunk-based backends built from the same
+    context therefore share one ChunkedTensor via `plans`.
+    """
+
+    st: SparseTensor
+    rank: int
+    mem_bytes: int | None = None
+    chunk_shape: tuple[int, ...] | None = None
+    capacity: int | None = None
+    fixed_preset: str = "int7"
+    lockfree_mode: bool = False
+    dense_fraction: float | None = None
+    mesh: object | None = None      # distributed backend; None → local mesh
+    reduce: str = "psum"            # distributed reduction strategy
+    interpret: bool = True          # pallas: interpret mode (CPU) vs real TPU
+    plans: PlanCache = dataclasses.field(default_factory=lambda: default_plan_cache)
+
+    def resolve_chunking(self) -> tuple[tuple[int, ...], int | None]:
+        """Fill chunk_shape/capacity from the partition decider if unset."""
+        if self.chunk_shape is None:
+            plan = self.plans.plan(
+                self.st, self.rank,
+                mem_bytes=self.mem_bytes or 64 * 1024 * 1024)
+            self.chunk_shape = plan.chunk_shape
+            self.capacity = self.capacity or plan.capacity
+        return self.chunk_shape, self.capacity
+
+    def chunked(self):
+        cs, cap = self.resolve_chunking()
+        return self.plans.chunked(self.st, cs, cap)
+
+    def device_arrays(self) -> dict:
+        cs, cap = self.resolve_chunking()
+        return self.plans.device_arrays(self.st, cs, cap)
+
+
+class Engine:
+    """Callable engine handle: `engine(factors, mode) -> (I_mode, R)`.
+
+    Carries the metadata CP-ALS and the benchmarks report on (`name`), plus
+    the build context and — for autotuned engines — the timing report.
+    """
+
+    def __init__(self, name: str, fn: Callable, *, spec: BackendSpec | None = None,
+                 context: EngineContext | None = None, report=None):
+        self.name = name
+        self._fn = fn
+        self.spec = spec
+        self.context = context
+        self.report = report
+
+    def __call__(self, factors, mode: int):
+        return self._fn(factors, mode)
+
+    def __repr__(self) -> str:
+        return f"Engine({self.name!r})"

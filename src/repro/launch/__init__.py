@@ -1,0 +1,22 @@
+"""Launch layer: meshes, shardings, train/serve entrypoints.
+
+Deliberately does NOT import the heavier submodules (steps, train, serve)
+at package-import time — they pull in the model stack; import them directly.
+"""
+from .mesh import (
+    dp_axes,
+    make_local_mesh,
+    make_mesh_compat,
+    make_production_mesh,
+    mesh_axes,
+    shard_map,
+)
+
+__all__ = [
+    "dp_axes",
+    "make_local_mesh",
+    "make_mesh_compat",
+    "make_production_mesh",
+    "mesh_axes",
+    "shard_map",
+]

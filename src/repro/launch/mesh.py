@@ -1,30 +1,80 @@
-"""Production mesh builders.
+"""Production mesh builders + JAX version-compat shims.
 
 A FUNCTION, not a module constant — importing this module never touches jax
 device state (the dry-run sets XLA_FLAGS before first jax init).
+
+The compat layer papers over API drift between JAX releases:
+
+  * ``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg of
+    ``jax.make_mesh``) only exist on newer JAX; older releases build the
+    same Auto-typed mesh without the kwarg.
+  * ``jax.shard_map`` (with ``check_vma=``) replaced
+    ``jax.experimental.shard_map.shard_map`` (with ``check_rep=``).
+
+Everything in this repo goes through ``make_mesh_compat`` / ``shard_map``
+below instead of calling the raw jax APIs.
 """
 from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh", "mesh_axes"]
+__all__ = [
+    "make_mesh_compat",
+    "shard_map",
+    "make_production_mesh",
+    "make_local_mesh",
+    "mesh_axes",
+    "dp_axes",
+]
+
+
+def _axis_types_kwargs(n_axes: int) -> dict:
+    """``axis_types=(Auto,)*n`` where supported, ``{}`` on older JAX."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh_compat(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """``jax.make_mesh`` with Auto axis types when the installed JAX has
+    them, plain mesh otherwise (older JAX is Auto-by-default)."""
+    try:
+        return jax.make_mesh(shape, axes, **_axis_types_kwargs(len(axes)))
+    except TypeError:  # very old jax.make_mesh without axis_types kwarg
+        return jax.make_mesh(shape, axes)
+
+
+def shard_map(body, *, mesh, in_specs, out_specs):
+    """Version-portable shard_map with replication checking disabled
+    (all bodies in this repo do their own collectives)."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+        return fn(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+    try:
+        return fn(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    except TypeError:
+        # mid-window releases expose jax.shard_map but still spell the
+        # replication-check kwarg check_rep
+        return fn(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_local_mesh(n_data: int | None = None, n_model: int = 1):
     """Whatever this host has (tests / examples / elastic resume)."""
     n = len(jax.devices())
     n_data = n_data or max(n // n_model, 1)
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((n_data, n_model), ("data", "model"))
 
 
 def mesh_axes(mesh) -> dict:

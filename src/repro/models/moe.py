@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..launch.mesh import shard_map
 from . import nn
 
 __all__ = ["MoEConfig", "moe_init", "moe_apply"]
@@ -149,7 +150,7 @@ def moe_apply(p, cfg: MoEConfig, x, *, mesh, dp_axes=("data",),
 
     body = partial(_moe_body, cfg, e_loc, model_axis, dp, seq_sharded)
     seq_spec = model_axis if seq_sharded else None
-    out = jax.shard_map(
+    out = shard_map(
         body,
         mesh=mesh,
         in_specs=(
@@ -160,7 +161,6 @@ def moe_apply(p, cfg: MoEConfig, x, *, mesh, dp_axes=("data",),
             P(model_axis, dp, None),
         ),
         out_specs=P(dp, seq_spec, None),
-        check_vma=False,
     )(x, p["router"], p["wg"], p["wu"], p["wd"])
 
     if cfg.n_shared_experts:

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..launch.mesh import shard_map
 from . import attention as attn_mod
 from . import moe as moe_mod
 from . import nn
@@ -150,11 +151,11 @@ def _mlp_manual_sp(p, cfg, ctx: MeshCtx, h):
             out = inter @ wd                        # (B/dp, S, D) partial
             return jax.lax.psum_scatter(out, tp, scatter_dimension=1,
                                         tiled=True)
-        return jax.shard_map(
+        return shard_map(
             body, mesh=mesh,
             in_specs=(P(dp, tp, None), P(data, tp), P(data, tp),
                       P(tp, data)),
-            out_specs=P(dp, tp, None), check_vma=False,
+            out_specs=P(dp, tp, None),
         )(h, p["wg"], p["wu"], p["wd"])
 
     def body(h_loc, w1, w2):
@@ -163,10 +164,10 @@ def _mlp_manual_sp(p, cfg, ctx: MeshCtx, h):
         w2 = gather_w(w2.astype(hf.dtype), 1)
         out = act(hf @ w1) @ w2
         return jax.lax.psum_scatter(out, tp, scatter_dimension=1, tiled=True)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(dp, tp, None), P(data, tp), P(tp, data)),
-        out_specs=P(dp, tp, None), check_vma=False,
+        out_specs=P(dp, tp, None),
     )(h, p["w1"], p["w2"])
 
 

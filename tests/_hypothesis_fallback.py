@@ -1,0 +1,67 @@
+"""Minimal deterministic stand-in for `hypothesis` so the property-test
+modules still collect and run in environments without it (the offline
+container).  `pip install -e .[dev]` installs the real hypothesis, which
+takes precedence via the try/except import in each test module.
+
+Supports exactly the surface this repo's tests use:
+
+  given(**kwargs_of_strategies), settings(max_examples=, deadline=),
+  strategies.integers / floats / sampled_from / tuples
+
+Sampling is deterministic (fixed seed per test) — these are smoke-strength
+replays of the property tests, not a shrinking fuzzer.
+"""
+from __future__ import annotations
+
+
+import numpy as np
+
+DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+class strategies:  # noqa: N801 — mirrors the `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+    @staticmethod
+    def tuples(*strats: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(s.sample(rng) for s in strats))
+
+
+def settings(max_examples: int = DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**named_strategies):
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples", DEFAULT_EXAMPLES))
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in named_strategies.items()}
+                fn(**drawn)
+        # no functools.wraps: pytest must see a zero-arg signature, not the
+        # original one (whose params would be mistaken for fixtures)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

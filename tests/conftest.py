@@ -4,6 +4,5 @@ import pytest
 
 @pytest.fixture(scope="session")
 def trivial_mesh():
-    import jax
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    return make_mesh_compat((1, 1), ("data", "model"))

@@ -3,7 +3,10 @@ lock-free accuracy (paper Fig. 6 claims), qformat properties."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container — deterministic replay shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import (Q5_3, Q9_7, Q17_15, cp_als, fit_value, random_tensor,
                         value_qformat)

@@ -29,14 +29,14 @@ def test_distributed_mttkrp_matches_single_device():
         from repro.core import random_tensor, DistributedMTTKRP
         from repro.core.chunking import chunk_tensor
         from repro.core.mttkrp import mttkrp_coo
+        from repro.launch.mesh import make_mesh_compat
         st = random_tensor((40, 32, 48), 2000, seed=1)
         rank = 8
         rng = np.random.default_rng(2)
         factors = [jnp.asarray(rng.uniform(-1,1,(d,rank)).astype(np.float32))
                    for d in st.shape]
         ct = chunk_tensor(st, (8, 8, 8), capacity=32)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh_compat((4, 2), ("data", "model"))
         errs = []
         for reduce in ("psum", "psum_scatter"):
             d = DistributedMTTKRP(mesh, ct, rank, reduce=reduce)
@@ -57,10 +57,10 @@ def test_distributed_cpals_converges():
         import jax, jax.numpy as jnp, numpy as np, json
         from repro.core import random_tensor, cp_als, DistributedMTTKRP
         from repro.core.chunking import chunk_tensor
+        from repro.launch.mesh import make_mesh_compat
         st = random_tensor((32, 24, 40), 1500, seed=3)
         ct = chunk_tensor(st, (8, 8, 8), capacity=64)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh_compat((4, 2), ("data", "model"))
         engine = DistributedMTTKRP(mesh, ct, 6, reduce="psum")
         dist = cp_als(st, 6, n_iters=3,
                       engine=lambda f, m: jnp.asarray(engine(f, m))[:st.shape[m]],
@@ -79,10 +79,9 @@ def test_moe_ep_sharded_matches_single(trivial_mesh=None):
         cfg = MoEConfig(d_model=32, d_ff=16, n_experts=8, top_k=2)
         p, _ = moe_init(jax.random.key(0), cfg)
         x = jax.random.normal(jax.random.key(1), (4, 16, 32)) * 0.5
-        mesh1 = jax.make_mesh((8, 1), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
-        mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh1 = make_mesh_compat((8, 1), ("data", "model"))
+        mesh2 = make_mesh_compat((2, 4), ("data", "model"))
         o1 = moe_apply(p, cfg, x, mesh=mesh1, seq_sharded=False)
         o2 = moe_apply(p, cfg, x, mesh=mesh2, seq_sharded=False)
         o3 = moe_apply(p, cfg, x, mesh=mesh2, seq_sharded=True)
@@ -103,8 +102,8 @@ def test_train_step_runs_sharded_and_checkpoint_roundtrip(tmp_path):
         from repro.launch.shardings import init_shapes, param_shardings
         from repro.optim import AdamWConfig, adamw_init
         from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((4, 2), ("data", "model"))
         cfg = get_smoke_config("qwen3_moe_30b_a3b")
         lm = LM(cfg)
         ctx = make_ctx(mesh, seq_sharded=True)

@@ -1,0 +1,195 @@
+"""Engine subsystem: every registered backend matches the COO oracle; the
+autotuner picks a measured winner and shares one chunking through the plan
+cache; the distributed backend is reachable through the registry on a real
+multi-device (host-platform) mesh."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_engine, random_tensor
+from repro.core.mttkrp import mttkrp_coo
+from repro.engine import (
+    Engine,
+    EngineContext,
+    PlanCache,
+    build_engine,
+    eligible_backends,
+    get_backend,
+    register_backend,
+    registered_backends,
+)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+CASES = [
+    ((30, 24, 36), 700, (8, 8, 8), 64),       # 3-mode
+    ((17, 23, 9), 300, (8, 8, 4), 32),        # 3-mode, non-divisible dims
+    ((24, 18, 20, 10), 500, (8, 8, 8, 4), 64),  # 4-mode
+]
+
+# fixed point is lossy by design (Q arithmetic); everything else must match
+# the float oracle to reduction-order noise.
+TOL = {"fixed": dict(rtol=5e-2, atol=5e-2), None: dict(rtol=1e-3, atol=1e-3)}
+
+
+def _factors(shape, rank, seed=2):
+    rng = np.random.default_rng(seed)
+    return tuple(jnp.asarray(rng.uniform(-1, 1, (d, rank)).astype(np.float32))
+                 for d in shape)
+
+
+@pytest.mark.parametrize("name", sorted(registered_backends()))
+@pytest.mark.parametrize("shape,nnz,cs,cap", CASES)
+def test_backend_matches_coo_oracle(name, shape, nnz, cs, cap):
+    st = random_tensor(shape, nnz, seed=1)
+    rank = 6
+    factors = _factors(shape, rank)
+    # distributed runs on whatever this process has (a 1-device mesh in the
+    # main pytest process; the real multi-device run is the subprocess test)
+    eng = build_engine(st, name, rank, chunk_shape=cs, capacity=cap,
+                       fixed_preset="int15-12", plans=PlanCache())
+    tol = TOL.get(name, TOL[None])
+    for mode in range(len(shape)):
+        ref = mttkrp_coo(factors, jnp.asarray(st.coords),
+                         jnp.asarray(st.values), mode=mode,
+                         out_dim=shape[mode])
+        out = eng(factors, mode)
+        assert out.shape == (shape[mode], rank), (name, mode, out.shape)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out), **tol)
+
+
+def test_auto_picks_backend_and_caches_plan():
+    st = random_tensor((30, 24, 36), 800, seed=2)
+    plans = PlanCache()
+    eng = build_engine(st, "auto", 5, chunk_shape=(8, 8, 8), capacity=64,
+                       plans=plans)
+    assert isinstance(eng, Engine)
+    assert eng.name.startswith("auto:")
+    report = eng.report
+    assert sorted(report.winners) == [0, 1, 2]
+    assert set(report.winners.values()) <= set(registered_backends())
+    # every lossless eligible backend was either timed or recorded skipped
+    assert set(report.timings) | set(report.skipped) == set(report.candidates)
+    # chunking happened exactly once, shared by all chunk-based candidates
+    assert plans.stats.chunk_misses == 1
+    assert plans.stats.chunk_hits >= 2
+    # the returned engine works and matches the oracle
+    factors = _factors(st.shape, 5)
+    ref = mttkrp_coo(factors, jnp.asarray(st.coords), jnp.asarray(st.values),
+                     mode=0, out_dim=st.shape[0])
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(eng(factors, 0)),
+                               rtol=1e-3, atol=1e-3)
+    # a second build against the same tensor re-uses the cached chunking
+    build_engine(st, "chunked", 5, chunk_shape=(8, 8, 8), capacity=64,
+                 plans=plans)
+    assert plans.stats.chunk_misses == 1
+
+
+def test_auto_excludes_lossy_backends_by_default():
+    st = random_tensor((20, 16, 24), 400, seed=3)
+    eng = build_engine(st, "auto", 4, chunk_shape=(8, 8, 8), capacity=32,
+                       plans=PlanCache())
+    assert "fixed" not in eng.report.candidates
+    # ...but explicit candidates may include it
+    eng2 = build_engine(st, "auto", 4, chunk_shape=(8, 8, 8), capacity=32,
+                        plans=PlanCache(), candidates=["chunked", "fixed"])
+    assert set(eng2.report.candidates) == {"chunked", "fixed"}
+
+
+def test_registry_capabilities_and_errors():
+    specs = registered_backends()
+    assert {"ref", "alto", "chunked", "fixed", "hetero", "pallas",
+            "distributed"} <= set(specs)
+    assert specs["fixed"].supports_fixed_point and not specs["fixed"].lossless
+    assert specs["distributed"].min_devices == 2
+    assert specs["chunked"].needs_chunking and not specs["ref"].needs_chunking
+    with pytest.raises(ValueError, match="unknown engine"):
+        get_backend("nonexistent")
+    # single-device process: distributed must not be autotune-eligible
+    assert "distributed" not in eligible_backends(n_devices=1)
+    assert "distributed" in eligible_backends(n_devices=8)
+
+
+def test_register_backend_decorator_roundtrip():
+    @register_backend("_test_double_ref", description="test-only")
+    def _build(ctx: EngineContext):
+        base = get_backend("ref").build(ctx)
+        return lambda factors, mode: 2.0 * base(factors, mode)
+    try:
+        st = random_tensor((12, 10, 8), 100, seed=4)
+        factors = _factors(st.shape, 3)
+        eng = build_engine(st, "_test_double_ref", 3)
+        ref = mttkrp_coo(factors, jnp.asarray(st.coords),
+                         jnp.asarray(st.values), mode=1, out_dim=10)
+        np.testing.assert_allclose(2.0 * np.asarray(ref),
+                                   np.asarray(eng(factors, 1)),
+                                   rtol=1e-5, atol=1e-5)
+    finally:
+        from repro.engine import registry as _reg
+        _reg._REGISTRY.pop("_test_double_ref", None)
+
+
+def test_make_engine_is_deprecated_shim():
+    st = random_tensor((14, 12, 10), 150, seed=5)
+    with pytest.warns(DeprecationWarning, match="build_engine"):
+        eng = make_engine(st, "ref", 4)
+    factors = _factors(st.shape, 4)
+    ref = mttkrp_coo(factors, jnp.asarray(st.coords), jnp.asarray(st.values),
+                     mode=0, out_dim=14)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(eng(factors, 0)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_cp_als_accepts_auto_and_reports_winner():
+    from repro.core import cp_als
+    st = random_tensor((20, 16, 24), 400, seed=6)
+    res = cp_als(st, 4, n_iters=2, engine="auto", chunk_shape=(8, 8, 8),
+                 capacity=32, plans=PlanCache())
+    assert res.engine.startswith("auto:")
+    ref = cp_als(st, 4, n_iters=2, engine="ref", seed=0)
+    np.testing.assert_allclose(res.fit_history, ref.fit_history,
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_distributed_backend_via_registry_multi_device():
+    """Acceptance: the distributed mesh backend is invocable through the
+    registry on ≥2 host-platform devices (8 here) and matches the oracle."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np, json
+        from repro.core import random_tensor
+        from repro.core.mttkrp import mttkrp_coo
+        from repro.engine import build_engine, eligible_backends
+        assert len(jax.devices()) == 8
+        assert "distributed" in eligible_backends()
+        st = random_tensor((40, 32, 48), 2000, seed=1)
+        rank = 8
+        rng = np.random.default_rng(2)
+        factors = [jnp.asarray(rng.uniform(-1, 1, (d, rank)).astype(np.float32))
+                   for d in st.shape]
+        eng = build_engine(st, "distributed", rank,
+                           chunk_shape=(8, 8, 8), capacity=32)
+        errs = []
+        for mode in range(3):
+            ref = mttkrp_coo(tuple(factors), jnp.asarray(st.coords),
+                             jnp.asarray(st.values), mode=mode,
+                             out_dim=st.shape[mode])
+            out = np.asarray(eng(factors, mode))
+            assert out.shape == (st.shape[mode], rank)
+            errs.append(float(np.max(np.abs(out - np.asarray(ref)))))
+        print(json.dumps(errs))
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    errs = json.loads(out.stdout.strip().splitlines()[-1])
+    assert max(errs) < 1e-3, errs

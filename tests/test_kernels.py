@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container — deterministic replay shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import Q9_7, Q17_15, random_tensor, value_qformat
 from repro.core.chunking import chunk_tensor

@@ -28,8 +28,8 @@ def test_manual_sp_matches_baseline_fwd_bwd():
         from repro.configs import get_smoke_config
         from repro.models import LM
         from repro.launch.steps import make_ctx
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         cfg = dc.replace(get_smoke_config("qwen3_14b"), d_ff=128)
         ctx = make_ctx(mesh, seq_sharded=True)
         toks = jax.random.randint(jax.random.key(7), (4, 32), 0, cfg.vocab)
@@ -60,8 +60,8 @@ def test_manual_sp_falls_back_when_not_applicable():
         from repro.configs import get_smoke_config
         from repro.models import LM
         from repro.launch.steps import make_ctx
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         cfg = dc.replace(get_smoke_config("qwen3_14b"), d_ff=130,
                          manual_sp=True)  # 130 % 4 != 0 → fallback
         lm = LM(cfg)

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container — deterministic replay shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.lockfree import wave_collision_mask
 from repro.data import SyntheticBatches, SyntheticTokens, host_shard_slice

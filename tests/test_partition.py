@@ -3,7 +3,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container — deterministic replay shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import random_tensor, decide_partition
 from repro.core.chunking import chunk_tensor, replication_stats
