@@ -10,12 +10,13 @@ EXPERIMENTS.md §Roofline.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+import os
+import time
 
-from repro.core import TABLE1, init_factors, table1_tensor
-from repro.engine import PlanCache, build_engine
+import jax.numpy as jnp
+
+from repro.core import init_factors, table1_tensor
+from repro.engine import PlanCache, TuningStore, build_engine
 
 from .common import save, table, timeit
 
@@ -29,7 +30,22 @@ def mttkrp_flops(st, rank: int) -> float:
     return st.nnz * rank * (st.ndim + 1.0)
 
 
-def run(fast: bool = False):
+def run(fast: bool = False, store: str | TuningStore | None = None):
+    """`store` — autotune persistence path shared with benchmarks.run (None
+    → an ephemeral per-invocation store: benchmark numbers must never
+    depend on hidden machine state, so the user-global cache is only used
+    when explicitly passed).  Each tensor's "auto" engine is built twice
+    against that store so the suite reports cold-vs-warm tuning overhead;
+    across two invocations with the same store path the first build is
+    already warm (CI gates on this)."""
+    if isinstance(store, TuningStore):
+        tstore = store
+    elif store is None:
+        import tempfile
+        tstore = TuningStore(os.path.join(
+            tempfile.mkdtemp(prefix="repro-fig7-"), "autotune.json"))
+    else:
+        tstore = TuningStore(store)
     rows = []
     tensors = ["nell2", "nell1", "amazon", "delicious", "lbnl", "5d_large"]
     if fast:
@@ -45,8 +61,32 @@ def run(fast: bool = False):
         # probes) shares a single chunking, as in a real CP-ALS run.
         plans = PlanCache()
         for ename, engine in engines:
-            eng = build_engine(st, engine, RANK, mem_bytes=256 * 1024,
-                               plans=plans)
+            extra = {}
+            if engine == "auto":
+                t0 = time.perf_counter()
+                eng = build_engine(st, engine, RANK, mem_bytes=256 * 1024,
+                                   plans=plans, store=tstore)
+                tune_s = time.perf_counter() - t0
+                # Re-build against the now-warm store: the fingerprint hit
+                # must skip every probe, so warm tuning overhead ≈ build.
+                t0 = time.perf_counter()
+                warm = build_engine(st, engine, RANK, mem_bytes=256 * 1024,
+                                    plans=plans, store=tstore)
+                warm_s = time.perf_counter() - t0
+                extra = dict(
+                    tune_ms=round(tune_s * 1e3, 2),
+                    tune_probes=eng.report.n_probes,
+                    tune_source=eng.report.source,
+                    tune_warm_ms=round(warm_s * 1e3, 2),
+                    tune_warm_probes=warm.report.n_probes,
+                )
+                print(f"[fig7] {tname} tuning: {eng.report.source} "
+                      f"probes={eng.report.n_probes} ({extra['tune_ms']}ms) "
+                      f"→ warm probes={warm.report.n_probes} "
+                      f"({extra['tune_warm_ms']}ms)", flush=True)
+            else:
+                eng = build_engine(st, engine, RANK, mem_bytes=256 * 1024,
+                                   plans=plans)
             per_mode = []
             for mode in range(st.ndim):
                 t = timeit(eng, factors, mode, warmup=1,
@@ -59,12 +99,13 @@ def run(fast: bool = False):
                 tensor=tname, engine=label,
                 time_all_modes_ms=round(total * 1e3, 2),
                 peak_fraction=f"{frac:.2e}",
+                **extra,
             ))
             print(f"[fig7] {tname} {label}: {rows[-1]['time_all_modes_ms']}ms",
                   flush=True)
     print("\n== Fig. 7: spMTTKRP time + peak-performance fraction ==")
     print(table(rows, ["tensor", "engine", "time_all_modes_ms",
-                       "peak_fraction"]))
+                       "peak_fraction", "tune_ms", "tune_warm_ms"]))
     save("fig7", rows)
     return rows
 

@@ -5,6 +5,7 @@
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -15,13 +16,32 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="reduced nnz/iters (CI mode)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--store", default=None,
+                    help="autotune persistence store path, shared by every "
+                         "suite that tunes; repeat invocations against the "
+                         "same path start warm (CI gates on this).  Default: "
+                         "an ephemeral per-invocation store, so benchmark "
+                         "numbers never depend on hidden machine state")
     args = ap.parse_args()
 
+    import tempfile
+
+    from repro.engine import TuningStore
+
     from . import fig6, fig7, fig8_9, table1
+    # One store for the whole benchmark invocation: a suite that autotunes
+    # warms the next, and a repeat invocation against the same --store path
+    # starts warm (reported as cold-vs-warm tuning overhead in fig7's rows;
+    # CI gates on it).  Without --store the store is ephemeral — benchmarks
+    # must be reproducible from the checkout alone, so they never read or
+    # write the user-global cache implicitly.
+    store_path = args.store or os.path.join(
+        tempfile.mkdtemp(prefix="repro-bench-"), "autotune.json")
+    store = TuningStore(store_path)
     suites = {
         "table1": lambda: table1.run(),
         "fig6": lambda: fig6.run(fast=args.fast),
-        "fig7": lambda: fig7.run(fast=args.fast),
+        "fig7": lambda: fig7.run(fast=args.fast, store=store),
         "fig8_9": lambda: fig8_9.run(fast=args.fast),
     }
     only = args.only.split(",") if args.only else list(suites)

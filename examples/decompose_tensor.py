@@ -6,6 +6,12 @@ autotuner — with convergence tracking.
   PYTHONPATH=src python examples/decompose_tensor.py [--tensor amazon]
       [--rank 10] [--iters 5]
       [--engine auto|hetero|chunked|fixed|distributed|ref|alto|pallas]
+      [--store [PATH]] [--max-probes K]
+
+`--store` persists autotune winners (default ~/.cache/repro/autotune.json,
+or $REPRO_AUTOTUNE_CACHE): re-running the same decomposition skips the
+probe phase.  `--max-probes` caps a cold start to the cost-model prior's
+top-K candidates.
 
 The distributed engine shards over however many devices this host exposes;
 run under XLA_FLAGS=--xla_force_host_platform_device_count=8 to see real
@@ -25,6 +31,11 @@ def main():
     ap.add_argument("--iters", type=int, default=5)
     ap.add_argument("--engine", default="auto",
                     choices=["auto", *sorted(registered_backends())])
+    ap.add_argument("--store", nargs="?", const=True, default=None,
+                    help="persist autotune winners (optional PATH; bare flag "
+                         "uses the default store)")
+    ap.add_argument("--max-probes", type=int, default=None,
+                    help="cold-start probe budget (prior's top-K)")
     ap.add_argument("--list-backends", action="store_true")
     args = ap.parse_args()
 
@@ -38,16 +49,20 @@ def main():
                             rank_axis=args.rank)
     print(f"[decompose] plan: chunks={plan.chunk_shape} cap={plan.capacity}")
 
+    t0 = time.time()
     engine = build_engine(st, args.engine, args.rank,
-                          chunk_shape=plan.chunk_shape, capacity=plan.capacity)
+                          chunk_shape=plan.chunk_shape, capacity=plan.capacity,
+                          store=args.store, max_probes=args.max_probes)
     if engine.report is not None:
         print(engine.report.summary())
+        print(f"[decompose] tuning: source={engine.report.source} "
+              f"probes={engine.report.n_probes} ({time.time()-t0:.2f}s)")
 
     t0 = time.time()
     res = cp_als(st, args.rank, n_iters=args.iters, engine=engine, seed=0)
     print(f"[decompose] engine={engine.name} iters={args.iters} "
           f"wall={time.time()-t0:.1f}s")
-    for i, (f, d) in enumerate(zip(res.fit_history, res.diff_history)):
+    for i, (f, d) in enumerate(zip(res.fit_history, res.diff_history, strict=True)):
         print(f"  iter {i+1}: fit={f:+.4f} avg|X-X̂|={d:.5f}")
 
 

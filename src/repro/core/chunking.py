@@ -67,7 +67,7 @@ class ChunkedTensor:
     @property
     def grid(self) -> tuple[int, ...]:
         return tuple(
-            -(-i // s) for i, s in zip(self.tensor_shape, self.chunk_shape)
+            -(-i // s) for i, s in zip(self.tensor_shape, self.chunk_shape, strict=True)
         )
 
     @property
@@ -113,7 +113,7 @@ def chunk_tensor(
     n = st.ndim
     cs = np.asarray(chunk_shape, dtype=np.int64)
     assert cs.shape == (n,) and np.all(cs >= 1)
-    grid = tuple(int(-(-i // s)) for i, s in zip(st.shape, cs))
+    grid = tuple(int(-(-i // s)) for i, s in zip(st.shape, cs, strict=True))
 
     chunk_coord = st.coords // cs.astype(np.int32)  # (nnz, N)
     # Linearize chunk coordinates to group nonzeros by chunk.
@@ -133,7 +133,7 @@ def chunk_tensor(
 
     # Split over-full chunks into multiple tasks (nonzero partitioning).
     task_chunk, task_start, task_count = [], [], []
-    for u, s0, c in zip(uniq, start, counts):
+    for u, s0, c in zip(uniq, start, counts, strict=True):
         cc = np.zeros(n, dtype=np.int32)
         rem = u
         for m in reversed(range(n)):
@@ -152,7 +152,7 @@ def chunk_tensor(
     coords_rel = np.zeros((t, capacity, n), dtype=np.int32)
     values = np.zeros((t, capacity), dtype=np.float32)
     nnz_per_task = np.asarray(task_count, dtype=np.int32)
-    for i, (s0, c) in enumerate(zip(task_start, task_count)):
+    for i, (s0, c) in enumerate(zip(task_start, task_count, strict=True)):
         abs_coords = coords_s[s0 : s0 + c]
         coords_rel[i, :c] = abs_coords - task_chunk[i] * cs.astype(np.int32)
         values[i, :c] = values_s[s0 : s0 + c]

@@ -13,7 +13,11 @@ exactly as the paper leaves them on the CPU.  The MTTKRP engine is swappable
   engine="pallas"      Pallas TPU kernel (kernels/ops.py), interpret on CPU
   engine="distributed" shard_map over a (data, model) mesh (paper §IV-B)
   engine="auto"        empirical autotuner: measures the eligible backends
-                       per (tensor, rank, mode) and dispatches to the winner
+                       per (tensor, rank, mode) and dispatches to the winner;
+                       pass store=True/path/TuningStore (forwarded via
+                       **engine_kwargs) to persist winners across processes,
+                       and max_probes=k to cap cold-start probing to the
+                       cost-model prior's top-k
   engine=callable      custom: f(factors, mode) -> (I_mode, R)
 
 Normalization is L-infinity by default (paper §IV-C: uses the full [-1, 1]
@@ -139,6 +143,27 @@ def make_engine(
 # CP-ALS driver (Algorithm 1)
 # ---------------------------------------------------------------------------
 
+def _exact_mttkrp(eng) -> bool:
+    """True when the engine's MTTKRP output is the exact float operand, so
+    the fit fast path (inner product from `mlast`) matches the slow path.
+    Lossy backends (fixed point) and lock-free collision dropping produce
+    approximate MTTKRPs — their noise must not bias the reported fit, so
+    they keep the factors-only slow path."""
+    ctx = getattr(eng, "context", None)
+    if ctx is not None and ctx.lockfree_mode:
+        return False
+    spec = getattr(eng, "spec", None)
+    if spec is not None:
+        return spec.lossless
+    report = getattr(eng, "report", None)
+    if report is not None:  # autotuned: every dispatched winner must be exact
+        from ..engine import registered_backends
+        regs = registered_backends()
+        return all(n in regs and regs[n].lossless
+                   for n in set(report.winners.values()))
+    return False  # bare callable: nothing is known about its output
+
+
 def cp_als(
     st: SparseTensor,
     rank: int,
@@ -163,9 +188,10 @@ def cp_als(
         eng = build_engine(st, engine, rank, **engine_kwargs)
         eng_name = eng.name  # e.g. "chunked", "auto:hetero"
 
+    fit_fast = _exact_mttkrp(eng)
     fit_history, diff_history, iter_times = [], [], []
     prev_fit = -np.inf
-    for it in range(n_iters):
+    for _ in range(n_iters):
         t0 = time.perf_counter()
         mlast = None
         for mode in range(n):
@@ -184,7 +210,14 @@ def cp_als(
         jax.block_until_ready(factors[-1])
         iter_times.append(time.perf_counter() - t0)
 
-        f = fit_value(st, factors, lam, mlast=None, last_mode=None)
+        # Fast-path fit: <X, X̂> = Σ λ_r Σ_i M[i,r]·F_last[i,r] reuses the
+        # last mode's MTTKRP output (M is independent of F_last, which was
+        # updated after M was computed), skipping the O(nnz·R)
+        # reconstruct_nnz pass that the slow path pays every iteration.
+        # Only exact engines qualify (see _exact_mttkrp).
+        f = fit_value(st, factors, lam,
+                      mlast=mlast if fit_fast else None,
+                      last_mode=n - 1 if fit_fast else None)
         fit_history.append(f)
         if track_diff:
             diff_history.append(avg_abs_diff(st, factors, lam))

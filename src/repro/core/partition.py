@@ -101,7 +101,7 @@ def decide_partition(
         chunk_shape[m] = -(-chunk_shape[m] // 2)
 
     cap = max(int(capacity_for(chunk_shape)), 1)
-    grid = [int(-(-i // s)) for i, s in zip(st.shape, chunk_shape)]
+    grid = [int(-(-i // s)) for i, s in zip(st.shape, chunk_shape, strict=True)]
     est_chunks = math.prod(grid)
     # Expected tasks ≈ nonempty chunks (+ splits); bound by nnz.
     est_tasks = min(est_chunks, st.nnz)

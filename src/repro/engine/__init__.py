@@ -1,14 +1,16 @@
 """Unified MTTKRP engine subsystem: backend registry + plan cache +
-empirical autotuner.
+empirical autotuner with persistence and a cost-model prior.
 
 Public entrypoint::
 
     from repro.engine import build_engine
     eng = build_engine(st, "auto", rank=10)     # measured selection
+    eng = build_engine(st, "auto", rank=10,
+                       store=True)              # persist winners across runs
     eng = build_engine(st, "chunked", rank=10)  # explicit backend
     out = eng(factors, mode)                    # (I_mode, R) f32
 
-`cp_als(st, rank, engine="auto")` goes through the same path.
+`cp_als(st, rank, engine="auto", store=...)` goes through the same path.
 """
 from __future__ import annotations
 
@@ -16,6 +18,14 @@ from typing import Callable
 
 from . import backends as _backends  # noqa: F401 — registers the built-ins
 from .autotune import AutotuneReport, autotune_engine
+from .costmodel import CostModelPrior, default_prior, prior_order
+from .persist import (
+    DEFAULT_STORE_ENV,
+    StoredEntry,
+    TuningStore,
+    WorkloadKey,
+    device_fingerprint,
+)
 from .plan import CacheStats, PlanCache, default_plan_cache
 from .registry import (
     BackendSpec,
@@ -32,15 +42,23 @@ __all__ = [
     "AutotuneReport",
     "BackendSpec",
     "CacheStats",
+    "CostModelPrior",
+    "DEFAULT_STORE_ENV",
     "Engine",
     "EngineContext",
     "PlanCache",
+    "StoredEntry",
+    "TuningStore",
+    "WorkloadKey",
     "autotune_engine",
     "backend_table",
     "build_engine",
     "default_plan_cache",
+    "default_prior",
+    "device_fingerprint",
     "eligible_backends",
     "get_backend",
+    "prior_order",
     "register_backend",
     "registered_backends",
 ]
@@ -56,6 +74,9 @@ def build_engine(
     warmup: int = 1,
     reps: int = 2,
     autotune_modes: list[int] | None = None,
+    store: TuningStore | str | bool | None = None,
+    prior: CostModelPrior | None = None,
+    max_probes: int | None = None,
     **options,
 ) -> Engine:
     """Build an MTTKRP engine through the registry.
@@ -63,6 +84,15 @@ def build_engine(
     method     — a registered backend name, ``"auto"`` (empirical selection
                  over the eligible lossless backends), or a callable
                  ``f(factors, mode)`` which is wrapped unchanged.
+    store      — autotuner persistence: ``True`` for the default store
+                 (``~/.cache/repro/autotune.json``, env
+                 ``REPRO_AUTOTUNE_CACHE`` overrides), a path, or a
+                 ``TuningStore``.  A workload+device fingerprint hit skips
+                 the probe phase and dispatches to the persisted winners.
+    prior      — cost-model prior ranking candidates on a cold start
+                 (default: the analytic memory-bound `default_prior`).
+    max_probes — cold-start probe budget: only the prior's top-k candidates
+                 are timed.
     options    — EngineContext fields: mem_bytes, chunk_shape, capacity,
                  fixed_preset, lockfree_mode, dense_fraction, mesh, reduce,
                  interpret.
@@ -78,7 +108,8 @@ def build_engine(
     if method == "auto":
         handle, _report = autotune_engine(
             ctx, candidates=candidates, warmup=warmup, reps=reps,
-            modes=autotune_modes)
+            modes=autotune_modes, store=store, prior=prior,
+            max_probes=max_probes)
         return handle
 
     spec = get_backend(method)

@@ -1,4 +1,4 @@
-"""Empirical backend autotuner (`engine="auto"`).
+"""Empirical backend autotuner (`engine="auto"`) with persistence + prior.
 
 The software analogue of the paper's PIM-vs-CPU-vs-heterogeneous decision:
 rather than predicting the winner from a model, measure it.  For each
@@ -7,6 +7,14 @@ mode) — warm, because jit compilation and chunking are amortized across
 CP-ALS iterations exactly as the paper amortizes tensor placement — and
 selects the fastest backend *per mode* (the paper's finding is per-workload;
 mode changes the gather/scatter balance enough to flip winners).
+
+Measurement is only paid once per workload: pass `store=` (a `TuningStore`,
+a path, or `True` for the default `~/.cache/repro/autotune.json`) and the
+measured winners are persisted under a workload + device fingerprint; an
+exact-or-near fingerprint hit on a later run skips the probe phase entirely.
+On a cold start, `max_probes=` caps the probe budget to the top-k candidates
+of the analytic memory-bound prior (costmodel.py), so a fat candidate set
+doesn't mean a fat tuning bill.
 
 Lossy backends (fixed point) are excluded by default: number format is an
 accuracy choice (paper Fig. 6), execution strategy is a speed choice
@@ -21,6 +29,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.cpals import init_factors
+from .costmodel import CostModelPrior, default_prior
+from .persist import StoredEntry, TuningStore, WorkloadKey, resolve_store
 from .registry import Engine, EngineContext, eligible_backends, get_backend
 
 __all__ = ["AutotuneReport", "autotune_engine"]
@@ -28,14 +38,18 @@ __all__ = ["AutotuneReport", "autotune_engine"]
 
 @dataclasses.dataclass
 class AutotuneReport:
-    """What the tuner measured and decided."""
+    """What the tuner measured (or recalled) and decided."""
 
     winners: dict[int, str]               # mode -> backend name
     timings: dict[str, dict[int, float]]  # backend -> mode -> best seconds
     candidates: list[str]                 # what was considered
-    skipped: dict[str, str]               # backend -> reason (error text)
+    skipped: dict[str, str]               # backend -> reason (error/prune text)
     warmup: int
     reps: int
+    source: str = "measured"              # "measured" | "persisted"
+    n_probes: int = 0                     # _time_call invocations this build
+    prior_order: list[str] | None = None  # cost-model ranking, when consulted
+    store_path: str | None = None         # persistence store, when used
 
     @property
     def chosen(self) -> str:
@@ -44,7 +58,12 @@ class AutotuneReport:
         return uniq[0] if len(uniq) == 1 else "+".join(uniq)
 
     def summary(self) -> str:
-        lines = [f"autotune: warmup={self.warmup} reps={self.reps}"]
+        head = f"autotune: warmup={self.warmup} reps={self.reps}"
+        if self.source != "measured":
+            head += f" source={self.source} probes={self.n_probes}"
+            if self.store_path:
+                head += f" store={self.store_path}"
+        lines = [head]
         for name, per_mode in sorted(self.timings.items()):
             t = " ".join(f"m{m}={s * 1e3:.2f}ms" for m, s in sorted(per_mode.items()))
             lines.append(f"  {name:12s} {t}")
@@ -66,6 +85,55 @@ def _time_call(engine, factors, mode: int, *, warmup: int, reps: int) -> float:
     return best
 
 
+def _dispatcher(built: dict, winners: dict[int, str], overall: str | None,
+                ndim: int):
+    """Route each MTTKRP call to its per-mode winner; untimed modes fall
+    back to `overall` when one was retained, else fail loudly — a stale
+    mode index must not surface as a bare KeyError from the closure."""
+    def engine(factors, mode):
+        name = winners.get(mode, overall)
+        if name is None:
+            raise ValueError(
+                f"autotuned engine has no backend for mode {mode}: tuned "
+                f"modes are {sorted(winners)} on a {ndim}-mode tensor "
+                f"(valid modes: 0..{ndim - 1})")
+        return built[name](factors, mode)
+    return engine
+
+
+def _engine_from_entry(
+    ctx: EngineContext,
+    entry: StoredEntry,
+    candidates: list[str],
+    modes: list[int],
+    store: TuningStore,
+) -> tuple[Engine, AutotuneReport] | None:
+    """Rebuild the persisted winners without probing.  Returns None — fall
+    back to cold measurement — when the entry doesn't cover the requested
+    modes or a persisted winner no longer builds on this host."""
+    winners = dict(entry.winners)
+    if not set(modes) <= set(winners):
+        return None
+    # Build every persisted winner — not just the requested modes' — so the
+    # dispatcher can serve any mode the entry covers (a caller that probed
+    # with restricted `modes` may still run CP-ALS over all of them).
+    needed = sorted(set(winners.values())
+                    | ({entry.overall} if entry.overall else set()))
+    built: dict[str, object] = {}
+    for name in needed:
+        try:
+            built[name] = get_backend(name).build(ctx)
+        except Exception:  # noqa: BLE001 — stale winner → re-measure
+            return None
+    report = AutotuneReport(
+        winners=winners, timings={n: dict(p) for n, p in entry.timings.items()},
+        candidates=list(candidates), skipped={},
+        warmup=entry.warmup, reps=entry.reps,
+        source="persisted", n_probes=0, store_path=store.path)
+    fn = _dispatcher(built, winners, entry.overall, ctx.st.ndim)
+    return Engine(f"auto:{report.chosen}", fn, context=ctx, report=report), report
+
+
 def autotune_engine(
     ctx: EngineContext,
     *,
@@ -74,9 +142,22 @@ def autotune_engine(
     reps: int = 2,
     modes: list[int] | None = None,
     seed: int = 0,
+    store: TuningStore | str | bool | None = None,
+    prior: CostModelPrior | None = None,
+    max_probes: int | None = None,
 ) -> tuple[Engine, AutotuneReport]:
     """Measure every candidate backend on `ctx.st` and return a dispatching
     engine that routes each MTTKRP mode to its measured winner.
+
+    store      — persistence (see persist.py): `True` for the default
+                 `~/.cache/repro/autotune.json` (env `REPRO_AUTOTUNE_CACHE`
+                 overrides), a path, or a `TuningStore`.  A fingerprint hit
+                 skips probing and reuses the persisted winners; a cold
+                 start writes its measurements back.
+    prior      — cost-model prior used to rank candidates on a cold start
+                 (defaults to `costmodel.default_prior`).
+    max_probes — probe only the prior's top-k candidates on a cold start;
+                 the rest are recorded in `report.skipped` as pruned.
 
     A backend that raises during build or timing is recorded in
     `report.skipped` and excluded — one broken strategy must not take the
@@ -93,20 +174,48 @@ def autotune_engine(
             candidates.remove("pallas")
     if not candidates:
         raise ValueError("no eligible backends to autotune over")
+    if max_probes is not None and max_probes < 1:
+        raise ValueError(f"max_probes must be >= 1 (got {max_probes})")
     if modes is None:
         modes = list(range(ctx.st.ndim))
+
+    tuning_store = resolve_store(store)
+    key = None
+    if tuning_store is not None:
+        key = WorkloadKey.from_tensor(ctx.st, ctx.rank, candidates)
+        entry = tuning_store.lookup(key)
+        if entry is not None:
+            warm = _engine_from_entry(ctx, entry, candidates, modes,
+                                      tuning_store)
+            if warm is not None:
+                return warm
+
+    # -- cold start: rank by the prior, probe (a budgeted subset), measure --
+    skipped: dict[str, str] = {}
+    probe_list = list(candidates)
+    order: list[str] | None = None
+    if max_probes is not None and max_probes < len(probe_list):
+        ranking = prior if prior is not None else default_prior
+        order = ranking.order(
+            ctx.st, ctx.rank, probe_list, modes, interpret=ctx.interpret,
+            n_devices=len(jax.devices()))
+        probe_list = order[:max_probes]
+        for name in order[max_probes:]:
+            skipped[name] = (
+                f"pruned by cost-model prior (max_probes={max_probes})")
 
     factors = [jnp.asarray(f) for f in init_factors(ctx.st.shape, ctx.rank, seed)]
     built: dict[str, object] = {}
     timings: dict[str, dict[int, float]] = {}
-    skipped: dict[str, str] = {}
-    for name in candidates:
+    n_probes = 0
+    for name in probe_list:
         try:
             eng = get_backend(name).build(ctx)
-            per_mode = {
-                m: _time_call(eng, factors, m, warmup=warmup, reps=reps)
-                for m in modes
-            }
+            per_mode: dict[int, float] = {}
+            for m in modes:
+                per_mode[m] = _time_call(eng, factors, m, warmup=warmup,
+                                         reps=reps)
+                n_probes += 1
         except Exception as e:  # noqa: BLE001 — any failure disqualifies
             skipped[name] = f"{type(e).__name__}: {e}"
             continue
@@ -117,10 +226,7 @@ def autotune_engine(
         raise RuntimeError(
             f"autotune: every candidate failed: {skipped}")
 
-    winners = {m: min(timings, key=lambda n: timings[n][m]) for m in modes}
-    report = AutotuneReport(
-        winners=winners, timings=timings, candidates=list(candidates),
-        skipped=skipped, warmup=warmup, reps=reps)
+    winners = {m: min(timings, key=lambda n, m=m: timings[n][m]) for m in modes}
 
     # Untimed modes (when `modes` was restricted) fall back to the overall
     # fastest backend summed over the timed modes; with every mode timed the
@@ -128,13 +234,25 @@ def autotune_engine(
     overall = None
     if set(winners) != set(range(ctx.st.ndim)):
         overall = min(timings, key=lambda n: sum(timings[n].values()))
+
+    report = AutotuneReport(
+        winners=winners, timings=timings, candidates=list(candidates),
+        skipped=skipped, warmup=warmup, reps=reps,
+        source="measured", n_probes=n_probes, prior_order=order,
+        store_path=tuning_store.path if tuning_store is not None else None)
+
+    if tuning_store is not None and key is not None:
+        try:
+            tuning_store.record(key, winners, timings, overall=overall,
+                                warmup=warmup, reps=reps)
+        except OSError:
+            pass  # an unwritable store degrades to per-process tuning
+
     # Drop losing engines so their device-resident data (reordered copies,
     # densified blocks, ...) doesn't stay alive for the whole CP-ALS run.
     built = {n: e for n, e in built.items()
              if n == overall or n in winners.values()}
 
-    def engine(factors, mode):
-        return built[winners.get(mode, overall)](factors, mode)
-
-    handle = Engine(f"auto:{report.chosen}", engine, context=ctx, report=report)
+    fn = _dispatcher(built, winners, overall, ctx.st.ndim)
+    handle = Engine(f"auto:{report.chosen}", fn, context=ctx, report=report)
     return handle, report

@@ -1,0 +1,118 @@
+"""Analytic memory-bound cost prior for cold-start backend ranking.
+
+spMTTKRP is memory-bound (the paper's roofline argument: a handful of FLOPs
+per nonzero against coordinate reads, factor-row gathers and output
+scatters), so candidate backends can be *ranked* — not timed — by the bytes
+they move per MTTKRP call.  The prior exists for one job: when the
+autotuner starts cold on a workload it has never measured, decide which
+candidates are worth spending probe budget on (`max_probes`).  It is a
+prior, not a predictor — measured timings always override it, and the
+persisted store (persist.py) means a workload pays the probe phase once.
+
+The per-backend models mirror how each execution strategy touches memory:
+
+  ref          COO scatter-add: every nonzero read-modify-writes its output
+               row (2x traffic on the accumulator).
+  alto         ALTO ordering turns the scatter into a near-sequential
+               segment sum (1x accumulator traffic) and improves factor
+               gather locality.
+  chunked      PRISM chunked format: padded tasks (capacity padding moves
+               dead bytes) but chunk-local accumulation.
+  hetero       chunked plus densified blocks for the MXU — extra traffic
+               for the dense side, in exchange for (hardware) MXU peak.
+  pallas       chunked bytes; in interpret mode a large constant penalty
+               reflects per-element Python dispatch.
+  distributed  chunked bytes split across devices plus an output
+               all-reduce and a per-call dispatch overhead.
+  fixed        chunked with 16-bit values/factors (half the gather and
+               value bytes).  Lossy — normally excluded upstream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from ..core.sptensor import SparseTensor
+
+__all__ = ["CostModelPrior", "default_prior", "prior_order"]
+
+_IDX = 4   # int32 coordinate bytes
+_VAL = 4   # float32 value bytes
+
+
+@dataclasses.dataclass
+class CostModelPrior:
+    """Ranks backend candidates by estimated seconds per MTTKRP call.
+
+    `bandwidth` is a sustained-stream guess (B/s) used only to convert bytes
+    into comparable seconds so per-call dispatch overheads can be folded in;
+    absolute values are meaningless, only the ordering matters.
+    """
+
+    bandwidth: float = 2.0e10        # sustained memory bandwidth guess, B/s
+    chunk_padding: float = 1.25      # padded-task overhead guess for chunked
+    hetero_overhead: float = 1.2     # densified-block traffic multiplier
+    interpret_penalty: float = 200.0 # pallas interpret-mode slowdown factor
+    dispatch_s: float = 1e-4         # per-call jit dispatch overhead
+    distributed_dispatch_s: float = 2e-3  # shard_map per-call overhead
+
+    def bytes_moved(self, name: str, st: SparseTensor, rank: int,
+                    mode: int) -> float:
+        """Estimated bytes moved by one mode-`mode` MTTKRP for `name`."""
+        n, d, r = st.nnz, st.ndim, rank
+        out = st.shape[mode] * r * _VAL
+        coords = n * d * _IDX
+        values = n * _VAL
+        gathers = n * (d - 1) * r * _VAL
+        base = coords + values + gathers
+        if name == "ref":
+            return base + 2 * n * r * _VAL + out
+        if name == "alto":
+            return coords + values + 0.75 * gathers + n * r * _VAL + out
+        if name in ("chunked", "pallas"):
+            return self.chunk_padding * (base + n * r * _VAL) + out
+        if name == "hetero":
+            return (self.hetero_overhead
+                    * (self.chunk_padding * (base + n * r * _VAL)) + out)
+        if name == "distributed":
+            return self.chunk_padding * (base + n * r * _VAL) + out
+        if name == "fixed":
+            return coords + 0.5 * (values + gathers) + n * r * _VAL + out
+        # Unknown (user-registered) backend: assume COO-like traffic so it
+        # ranks mid-field and still gets probed under a generous budget.
+        return base + 2 * n * r * _VAL + out
+
+    def seconds(self, name: str, st: SparseTensor, rank: int, mode: int, *,
+                interpret: bool = True, n_devices: int = 1) -> float:
+        t = self.bytes_moved(name, st, rank, mode) / self.bandwidth
+        if name == "distributed":
+            t = t / max(2, n_devices) + self.distributed_dispatch_s
+            t += 2 * st.shape[mode] * rank * _VAL / self.bandwidth  # all-reduce
+        else:
+            t += self.dispatch_s
+        if name == "pallas" and interpret:
+            t *= self.interpret_penalty
+        return t
+
+    def order(self, st: SparseTensor, rank: int, candidates: list[str],
+              modes: list[int] | None = None, *, interpret: bool = True,
+              n_devices: int = 1) -> list[str]:
+        """Candidates sorted cheapest-first by estimated total seconds over
+        `modes` (ties broken by name, so the ordering is deterministic)."""
+        if modes is None:
+            modes = list(range(st.ndim))
+        def total(name: str) -> float:
+            return math.fsum(
+                self.seconds(name, st, rank, m, interpret=interpret,
+                             n_devices=n_devices) for m in modes)
+        return sorted(candidates, key=lambda name: (total(name), name))
+
+
+#: Shared default instance (the prior is stateless apart from coefficients).
+default_prior = CostModelPrior()
+
+
+def prior_order(st: SparseTensor, rank: int, candidates: list[str],
+                modes: list[int] | None = None, **kw) -> list[str]:
+    """Module-level convenience over `default_prior.order`."""
+    return default_prior.order(st, rank, candidates, modes, **kw)

@@ -1,0 +1,284 @@
+"""Persistent autotuner store: measured winners survive the process.
+
+The paper's finding (Fig. 7) is that the best spMTTKRP strategy is
+workload-dependent; the autotuner measures that — but measurement is only
+worth its cost if a familiar workload doesn't re-pay it every process.  The
+store persists each `AutotuneReport` keyed by a *workload fingerprint*
+(tensor shape, nnz, density, mode count, rank, candidate set) plus a
+*device fingerprint* (jax backend/platform, device count, device kind, jax
+version), so a repeat decomposition of the same — or a near-identical —
+tensor skips the probe phase entirely and dispatches straight to the
+persisted per-mode winners.
+
+Matching is exact-or-near: everything in the fingerprint must match
+exactly except nnz/density, which tolerate a relative drift (default 10%)
+— re-decomposing this week's crawl of last week's tensor should still hit.
+A device-fingerprint change (different backend, device count, or jax
+version) always invalidates: timings measured on other silicon are noise.
+
+Default store path: `~/.cache/repro/autotune.json`, overridable with the
+`REPRO_AUTOTUNE_CACHE` environment variable or the `path` argument.  Writes
+are atomic (temp file + rename) so concurrent processes can share a store
+without corrupting it; last writer wins per fingerprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+
+import jax
+
+__all__ = [
+    "TuningStore",
+    "WorkloadKey",
+    "StoredEntry",
+    "device_fingerprint",
+    "DEFAULT_STORE_ENV",
+]
+
+DEFAULT_STORE_ENV = "REPRO_AUTOTUNE_CACHE"
+_SCHEMA_VERSION = 1
+
+
+def default_store_path() -> str:
+    env = os.environ.get(DEFAULT_STORE_ENV)
+    if env:
+        return env
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "autotune.json")
+
+
+def device_fingerprint() -> dict[str, str]:
+    """What the timings were measured on.  Any change invalidates entries:
+    a winner measured on other silicon (or another XLA) is not a prior worth
+    trusting over re-measurement."""
+    devices = jax.devices()
+    return {
+        "backend": jax.default_backend(),
+        "device_count": str(len(devices)),
+        "device_kind": devices[0].device_kind,
+        "jax": jax.__version__,
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadKey:
+    """Fingerprint of one (tensor, rank, candidate set, device) workload."""
+
+    shape: tuple[int, ...]
+    nnz: int
+    density: float
+    ndim: int
+    rank: int
+    candidates: tuple[str, ...]
+    device: tuple[tuple[str, str], ...]
+
+    @classmethod
+    def from_tensor(cls, st, rank: int, candidates) -> "WorkloadKey":
+        return cls(
+            shape=tuple(int(d) for d in st.shape),
+            nnz=int(st.nnz),
+            density=float(st.density),
+            ndim=int(st.ndim),
+            rank=int(rank),
+            candidates=tuple(sorted(candidates)),
+            device=tuple(sorted(device_fingerprint().items())),
+        )
+
+    def to_json(self) -> dict:
+        return {
+            "shape": list(self.shape),
+            "nnz": self.nnz,
+            "density": self.density,
+            "ndim": self.ndim,
+            "rank": self.rank,
+            "candidates": list(self.candidates),
+            "device": {k: v for k, v in self.device},
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "WorkloadKey":
+        return cls(
+            shape=tuple(int(x) for x in d["shape"]),
+            nnz=int(d["nnz"]),
+            density=float(d["density"]),
+            ndim=int(d["ndim"]),
+            rank=int(d["rank"]),
+            candidates=tuple(d["candidates"]),
+            device=tuple(sorted((str(k), str(v))
+                                for k, v in d["device"].items())),
+        )
+
+    def matches(self, other: "WorkloadKey", *, nnz_tol: float = 0.1) -> bool:
+        """Exact-or-near: everything exact except nnz/density within a
+        relative tolerance (the same tensor re-ingested rarely has the
+        byte-identical nonzero count)."""
+        if (self.shape, self.ndim, self.rank, self.candidates, self.device) != (
+                other.shape, other.ndim, other.rank, other.candidates,
+                other.device):
+            return False
+        if other.nnz == 0 or self.nnz == 0:
+            return self.nnz == other.nnz
+        if abs(self.nnz - other.nnz) / other.nnz > nnz_tol:
+            return False
+        return abs(self.density - other.density) / max(other.density, 1e-30) <= nnz_tol
+
+
+@dataclasses.dataclass
+class StoredEntry:
+    """One persisted autotune outcome."""
+
+    key: WorkloadKey
+    winners: dict[int, str]                # mode -> backend name
+    timings: dict[str, dict[int, float]]   # backend -> mode -> best seconds
+    overall: str | None = None             # fallback for untimed modes
+    warmup: int = 1
+    reps: int = 2
+    created: float = 0.0
+
+    def to_json(self) -> dict:
+        return {
+            "key": self.key.to_json(),
+            "winners": {str(m): n for m, n in self.winners.items()},
+            "timings": {n: {str(m): t for m, t in per.items()}
+                        for n, per in self.timings.items()},
+            "overall": self.overall,
+            "warmup": self.warmup,
+            "reps": self.reps,
+            "created": self.created,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "StoredEntry":
+        return cls(
+            key=WorkloadKey.from_json(d["key"]),
+            winners={int(m): str(n) for m, n in d["winners"].items()},
+            timings={n: {int(m): float(t) for m, t in per.items()}
+                     for n, per in d.get("timings", {}).items()},
+            overall=d.get("overall"),
+            warmup=int(d.get("warmup", 1)),
+            reps=int(d.get("reps", 2)),
+            created=float(d.get("created", 0.0)),
+        )
+
+
+class TuningStore:
+    """JSON-file store of autotune outcomes.
+
+    Lookup is linear over entries (stores hold tens of workloads, not
+    millions); exact fingerprint matches win over near matches, and among
+    near matches the closest nnz wins.
+    """
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.path = os.fspath(path) if path is not None else default_store_path()
+        self._entries: list[StoredEntry] | None = None  # lazy-loaded
+
+    # -- I/O ---------------------------------------------------------------
+    def _read_disk(self) -> list[StoredEntry]:
+        try:
+            with open(self.path) as f:
+                raw = json.load(f)
+            if isinstance(raw, dict) and raw.get("version") == _SCHEMA_VERSION:
+                return [StoredEntry.from_json(e) for e in raw.get("entries", [])]
+        except FileNotFoundError:
+            pass
+        except (json.JSONDecodeError, KeyError, TypeError, ValueError, OSError):
+            # A corrupt or foreign-schema store must never take the
+            # decomposition down — fall back to cold-start behaviour.
+            pass
+        return []
+
+    def _load(self) -> list[StoredEntry]:
+        if self._entries is None:
+            self._entries = self._read_disk()
+        return self._entries
+
+    def save(self) -> None:
+        # Merge with what's on disk right now, not with our lazily-cached
+        # snapshot: concurrent processes sharing a store must lose at most
+        # a racing write to the *same* fingerprint, never other workloads'
+        # entries.  (The rename below is atomic; this read-merge-write makes
+        # "last writer wins" hold per fingerprint rather than per file.)
+        by_key = {e.key: e for e in self._read_disk()}
+        by_key.update({e.key: e for e in self._load()})
+        self._entries = list(by_key.values())
+        payload = {
+            "version": _SCHEMA_VERSION,
+            "entries": [e.to_json() for e in self._entries],
+        }
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(prefix=".autotune-", suffix=".json", dir=d)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1)
+            os.replace(tmp, self.path)  # atomic: concurrent readers see old/new
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- queries -----------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._load())
+
+    def entries(self) -> list[StoredEntry]:
+        return list(self._load())
+
+    def lookup(self, key: WorkloadKey, *, nnz_tol: float = 0.1) -> StoredEntry | None:
+        """Exact-or-near fingerprint match (see `WorkloadKey.matches`)."""
+        best: StoredEntry | None = None
+        best_dist = float("inf")
+        for e in self._load():
+            if e.key == key:
+                return e
+            if key.matches(e.key, nnz_tol=nnz_tol):
+                dist = abs(e.key.nnz - key.nnz) / max(key.nnz, 1)
+                if dist < best_dist:
+                    best, best_dist = e, dist
+        return best
+
+    def record(self, key: WorkloadKey, winners: dict[int, str],
+               timings: dict[str, dict[int, float]], *,
+               overall: str | None = None, warmup: int = 1, reps: int = 2,
+               save: bool = True) -> StoredEntry:
+        """Insert or replace the entry for an exact fingerprint."""
+        entry = StoredEntry(key=key, winners=dict(winners),
+                            timings={n: dict(p) for n, p in timings.items()},
+                            overall=overall, warmup=warmup, reps=reps,
+                            created=time.time())
+        entries = self._load()
+        self._entries = [e for e in entries if e.key != key] + [entry]
+        if save:
+            self.save()
+        return entry
+
+    def clear(self) -> None:
+        """Drop all entries and delete the backing file."""
+        self._entries = []
+        try:
+            os.unlink(self.path)
+        except FileNotFoundError:
+            pass
+
+    def __repr__(self) -> str:
+        return f"TuningStore({self.path!r}, entries={len(self)})"
+
+
+def resolve_store(store) -> TuningStore | None:
+    """Normalize the `store=` argument accepted by the autotuner:
+    None/False → no persistence; True → default path (env-overridable);
+    str/PathLike → that path; TuningStore → itself."""
+    if store is None or store is False:
+        return None
+    if store is True:
+        return TuningStore()
+    if isinstance(store, TuningStore):
+        return store
+    return TuningStore(store)

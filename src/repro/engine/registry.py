@@ -156,6 +156,15 @@ class EngineContext:
     interpret: bool = True          # pallas: interpret mode (CPU) vs real TPU
     plans: PlanCache = dataclasses.field(default_factory=lambda: default_plan_cache)
 
+    def __post_init__(self):
+        # Validate up front: `capacity or plan.capacity` downstream would
+        # silently turn an explicit 0 into the plan's value.
+        if self.capacity is not None and self.capacity < 1:
+            raise ValueError(
+                f"capacity must be >= 1 nonzero slot per chunk task (got "
+                f"{self.capacity}); pass capacity=None to let the partition "
+                "decider choose")
+
     def resolve_chunking(self) -> tuple[tuple[int, ...], int | None]:
         """Fill chunk_shape/capacity from the partition decider if unset."""
         if self.chunk_shape is None:
@@ -163,7 +172,8 @@ class EngineContext:
                 self.st, self.rank,
                 mem_bytes=self.mem_bytes or 64 * 1024 * 1024)
             self.chunk_shape = plan.chunk_shape
-            self.capacity = self.capacity or plan.capacity
+            if self.capacity is None:
+                self.capacity = plan.capacity
         return self.chunk_shape, self.capacity
 
     def chunked(self):

@@ -45,7 +45,7 @@ def _axis_size(mesh, axis) -> int:
 
 def _resolve(mesh, shape, logical_axes):
     spec, used = [], set()
-    for dim, ax in zip(shape, logical_axes):
+    for dim, ax in zip(shape, logical_axes, strict=True):
         mesh_ax = LOGICAL_RULES.get(ax) if ax is not None else None
         if (mesh_ax is not None and mesh_ax not in used
                 and dim % _axis_size(mesh, mesh_ax) == 0):

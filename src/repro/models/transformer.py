@@ -361,7 +361,7 @@ def stack_init(key, cfg, pattern, n_layers: int):
         seg_p, seg_s = {}, {}
         for j, spec in enumerate(pat):
             per_rep = []
-            for r in range(reps):
+            for _ in range(reps):
                 p, s = block_init(keys[ki], cfg, spec)
                 ki += 1
                 per_rep.append(p)
@@ -376,8 +376,8 @@ def stack_init(key, cfg, pattern, n_layers: int):
 
 def stack_apply(params, cfg, segs, ctx: MeshCtx, x, *, positions,
                 enc_out=None):
-    for seg_p, (pat, reps) in zip(params, segs):
-        def body(x, layer_p):
+    for seg_p, (pat, reps) in zip(params, segs, strict=True):
+        def body(x, layer_p, pat=pat):
             for j, spec in enumerate(pat):
                 x = block_apply(layer_p[f"b{j}"], cfg, spec, ctx, x,
                                 positions=positions, enc_out=enc_out)
@@ -387,7 +387,7 @@ def stack_apply(params, cfg, segs, ctx: MeshCtx, x, *, positions,
             # exact-cost mode: XLA counts a while body once, so the dry-run
             # calibration unrolls the layer loop into straight-line HLO
             for r in range(reps):
-                layer_p = jax.tree.map(lambda a: a[r], seg_p)
+                layer_p = jax.tree.map(lambda a, r=r: a[r], seg_p)
                 x, _ = body(x, layer_p)
         else:
             x, _ = jax.lax.scan(body, x, seg_p)
@@ -402,15 +402,16 @@ def init_stack_cache(cfg, segs, batch: int, max_len: int, enc_len: int = 0,
         for j, spec in enumerate(pat):
             one = init_block_cache(cfg, spec, batch, max_len, enc_len, dtype)
             seg_c[f"b{j}"] = jax.tree.map(
-                lambda a: jnp.broadcast_to(a, (reps,) + a.shape), one)
+                lambda a, reps=reps: jnp.broadcast_to(a, (reps,) + a.shape),
+                one)
         caches.append(seg_c)
     return caches
 
 
 def stack_decode(params, cfg, segs, ctx: MeshCtx, x, caches, pos):
     new_caches = []
-    for seg_p, seg_c, (pat, reps) in zip(params, caches, segs):
-        def body(x, pc):
+    for seg_p, seg_c, (pat, reps) in zip(params, caches, segs, strict=True):
+        def body(x, pc, pat=pat):
             layer_p, layer_c = pc
             new_c = dict(layer_c)
             for j, spec in enumerate(pat):
@@ -420,7 +421,7 @@ def stack_decode(params, cfg, segs, ctx: MeshCtx, x, caches, pos):
         if cfg.unroll_stack:  # exact-cost mode (see stack_apply)
             outs = []
             for r in range(reps):
-                pc = jax.tree.map(lambda a: a[r], (seg_p, seg_c))
+                pc = jax.tree.map(lambda a, r=r: a[r], (seg_p, seg_c))
                 x, nc_r = body(x, pc)
                 outs.append(nc_r)
             nc = jax.tree.map(lambda *a: jnp.stack(a), *outs)

@@ -71,7 +71,7 @@ def cp_compressed_mean(grads, state, axis_name: str | None):
     flat_g, treedef = jax.tree_util.tree_flatten(grads)
     flat_s = treedef.flatten_up_to(state)
     out_g, out_s = [], []
-    for g, s in zip(flat_g, flat_s):
+    for g, s in zip(flat_g, flat_s, strict=True):
         ng, ns = compress_grad(g, s, axis_name)
         out_g.append(ng)
         out_s.append(ns)

@@ -1,0 +1,299 @@
+"""Autotuner persistence + cost-model prior: store round-trip, fingerprint
+invalidation, warm zero-probe rebuilds, probe-budget pruning, and the
+dispatch/validation bugfixes that ride along (stale-mode ValueError,
+capacity >= 1, fit fast path parity)."""
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cp_als, fit_value, random_tensor
+from repro.core.mttkrp import mttkrp_coo
+from repro.engine import (
+    CostModelPrior,
+    EngineContext,
+    PlanCache,
+    TuningStore,
+    WorkloadKey,
+    build_engine,
+)
+from repro.engine import autotune as _autotune
+from repro.engine.persist import StoredEntry
+
+KW = dict(chunk_shape=(8, 8, 8), capacity=64)
+
+
+def _key(st, rank=4, candidates=("alto", "chunked", "ref")):
+    return WorkloadKey.from_tensor(st, rank, candidates)
+
+
+def _probe_counter(monkeypatch):
+    """Instrument _time_call: every probe the tuner performs is counted."""
+    calls = []
+    real = _autotune._time_call
+
+    def counting(*a, **k):
+        calls.append(1)
+        return real(*a, **k)
+
+    monkeypatch.setattr(_autotune, "_time_call", counting)
+    return calls
+
+
+# ---------------------------------------------------------------------------
+# TuningStore units
+# ---------------------------------------------------------------------------
+
+def test_store_roundtrip(tmp_path):
+    st = random_tensor((20, 16, 24), 400, seed=1)
+    path = tmp_path / "autotune.json"
+    key = _key(st)
+    winners = {0: "alto", 1: "chunked", 2: "alto"}
+    timings = {"alto": {0: 1e-3, 1: 2e-3, 2: 1.5e-3},
+               "chunked": {0: 2e-3, 1: 1e-3, 2: 3e-3}}
+    TuningStore(path).record(key, winners, timings, overall="alto",
+                             warmup=1, reps=2)
+    # a fresh store instance re-reads from disk
+    entry = TuningStore(path).lookup(key)
+    assert entry is not None
+    assert entry.key == key
+    assert entry.winners == winners
+    assert entry.timings == timings
+    assert entry.overall == "alto"
+    # mode keys survive the str round-trip as ints
+    assert all(isinstance(m, int) for m in entry.winners)
+    assert all(isinstance(m, int)
+               for per in entry.timings.values() for m in per)
+
+
+def test_store_replaces_exact_key_and_survives_corruption(tmp_path):
+    st = random_tensor((20, 16, 24), 400, seed=1)
+    path = tmp_path / "autotune.json"
+    key = _key(st)
+    store = TuningStore(path)
+    store.record(key, {0: "ref"}, {"ref": {0: 1.0}})
+    store.record(key, {0: "alto"}, {"alto": {0: 0.5}})
+    assert len(TuningStore(path)) == 1
+    assert TuningStore(path).lookup(key).winners == {0: "alto"}
+    # corrupt file → cold-start behaviour, not a crash
+    path.write_text("{not json")
+    assert TuningStore(path).lookup(key) is None
+    # foreign schema version → ignored
+    path.write_text(json.dumps({"version": 999, "entries": [1, 2]}))
+    assert len(TuningStore(path)) == 0
+
+
+def test_device_fingerprint_mismatch_invalidates(tmp_path):
+    st = random_tensor((20, 16, 24), 400, seed=1)
+    store = TuningStore(tmp_path / "autotune.json")
+    key = _key(st)
+    store.record(key, {0: "ref", 1: "ref", 2: "ref"}, {"ref": {0: 1.0, 1: 1.0, 2: 1.0}})
+    other_device = dataclasses.replace(
+        key, device=tuple(sorted({"backend": "tpu", "device_count": "8",
+                                  "device_kind": "TPU v9",
+                                  "jax": "99.0"}.items())))
+    assert store.lookup(key) is not None
+    assert store.lookup(other_device) is None
+
+
+def test_near_fingerprint_tolerance_on_nnz(tmp_path):
+    st = random_tensor((30, 24, 36), 700, seed=2)
+    store = TuningStore(tmp_path / "autotune.json")
+    store.record(_key(st), {0: "ref"}, {"ref": {0: 1.0}})
+    # same shape/rank/candidates, nnz a few % off → near hit
+    near = random_tensor((30, 24, 36), 730, seed=7)
+    assert store.lookup(_key(near)) is not None
+    # nnz 3x off → miss
+    far = random_tensor((30, 24, 36), 2100, seed=7)
+    assert store.lookup(_key(far)) is None
+    # different rank → miss even with identical tensor stats
+    assert store.lookup(_key(st, rank=9)) is None
+    # different candidate set → miss (timings don't transfer)
+    assert store.lookup(_key(st, candidates=("ref",))) is None
+
+
+# ---------------------------------------------------------------------------
+# Warm builds through build_engine
+# ---------------------------------------------------------------------------
+
+def test_warm_build_skips_probes_and_reuses_winners(tmp_path, monkeypatch):
+    """Acceptance: the second build on an identical fingerprint performs
+    zero timing probes and selects the first run's measured winners."""
+    st = random_tensor((30, 24, 36), 700, seed=2)
+    path = tmp_path / "autotune.json"
+    cold = build_engine(st, "auto", 4, plans=PlanCache(),
+                        store=TuningStore(path), **KW)
+    assert cold.report.source == "measured"
+    assert cold.report.n_probes > 0
+    assert cold.report.store_path == str(path)
+
+    calls = _probe_counter(monkeypatch)
+    warm = build_engine(st, "auto", 4, plans=PlanCache(),
+                        store=TuningStore(path), **KW)
+    assert calls == []                      # zero _time_call probes
+    assert warm.report.source == "persisted"
+    assert warm.report.n_probes == 0
+    assert warm.report.winners == cold.report.winners
+    # floats round-trip JSON exactly (shortest-repr serialization)
+    assert warm.report.timings == cold.report.timings
+    # the warm engine dispatches to a working persisted winner
+    rank = 4
+    rng = np.random.default_rng(3)
+    factors = tuple(jnp.asarray(rng.uniform(-1, 1, (d, rank)).astype(np.float32))
+                    for d in st.shape)
+    for mode in range(st.ndim):
+        ref = mttkrp_coo(factors, jnp.asarray(st.coords),
+                         jnp.asarray(st.values), mode=mode,
+                         out_dim=st.shape[mode])
+        np.testing.assert_allclose(np.asarray(ref),
+                                   np.asarray(warm(factors, mode)),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_cp_als_auto_threads_store(tmp_path, monkeypatch):
+    st = random_tensor((20, 16, 24), 400, seed=3)
+    path = tmp_path / "autotune.json"
+    r1 = cp_als(st, 4, n_iters=2, engine="auto", plans=PlanCache(),
+                store=str(path), **KW)
+    assert r1.engine.startswith("auto:")
+    calls = _probe_counter(monkeypatch)
+    r2 = cp_als(st, 4, n_iters=2, engine="auto", plans=PlanCache(),
+                store=str(path), **KW)
+    assert calls == []
+    assert r2.engine == r1.engine
+    np.testing.assert_allclose(r1.fit_history, r2.fit_history,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_warm_build_with_restricted_modes_serves_all_persisted_modes(
+        tmp_path, monkeypatch):
+    """A warm build that only *requested* mode 0 must still dispatch modes
+    1..N-1 through the persisted winners — not die on a bare KeyError."""
+    st = random_tensor((20, 16, 24), 400, seed=6)
+    path = tmp_path / "autotune.json"
+    build_engine(st, "auto", 4, plans=PlanCache(), store=TuningStore(path),
+                 **KW)
+    calls = _probe_counter(monkeypatch)
+    warm = build_engine(st, "auto", 4, plans=PlanCache(),
+                        store=TuningStore(path), autotune_modes=[0], **KW)
+    assert calls == []
+    factors = tuple(jnp.zeros((d, 4), jnp.float32) for d in st.shape)
+    for mode in range(st.ndim):  # every persisted mode dispatches
+        assert warm(factors, mode).shape == (st.shape[mode], 4)
+
+
+def test_concurrent_saves_merge_per_fingerprint(tmp_path):
+    """Two store handles on one path must not clobber each other's entries:
+    last-writer-wins holds per fingerprint, not per file."""
+    st_a = random_tensor((20, 16, 24), 400, seed=1)
+    st_b = random_tensor((40, 32, 12), 900, seed=2)
+    path = tmp_path / "autotune.json"
+    a, b = TuningStore(path), TuningStore(path)
+    a.lookup(_key(st_a))   # both lazily snapshot the (empty) file
+    b.lookup(_key(st_b))
+    a.record(_key(st_a), {0: "ref"}, {"ref": {0: 1.0}})
+    b.record(_key(st_b), {0: "alto"}, {"alto": {0: 2.0}})
+    fresh = TuningStore(path)
+    assert fresh.lookup(_key(st_a)) is not None   # A's write survived B's
+    assert fresh.lookup(_key(st_b)) is not None
+    assert len(fresh) == 2
+
+
+def test_unbuildable_persisted_winner_falls_back_to_measurement(tmp_path):
+    st = random_tensor((20, 16, 24), 400, seed=4)
+    store = TuningStore(tmp_path / "autotune.json")
+    cands = ["alto", "chunked", "ref"]
+    key = WorkloadKey.from_tensor(st, 4, cands)
+    store.record(key, {0: "gone_backend", 1: "ref", 2: "ref"},
+                 {"gone_backend": {0: 1.0}, "ref": {0: 2.0, 1: 2.0, 2: 2.0}})
+    eng = build_engine(st, "auto", 4, plans=PlanCache(), store=store,
+                       candidates=cands, **KW)
+    assert eng.report.source == "measured"   # stale entry → re-probed
+    assert eng.report.n_probes > 0
+
+
+# ---------------------------------------------------------------------------
+# Cost-model prior + probe budget
+# ---------------------------------------------------------------------------
+
+def test_prior_order_is_a_deterministic_permutation():
+    st = random_tensor((30, 24, 36), 700, seed=2)
+    prior = CostModelPrior()
+    cands = ["ref", "alto", "chunked", "hetero", "pallas"]
+    order = prior.order(st, 4, cands)
+    assert sorted(order) == sorted(cands)
+    assert order == prior.order(st, 4, list(reversed(cands)))
+    # interpret-mode pallas is penalized to the back of the field
+    assert order[-1] == "pallas"
+
+
+def test_max_probes_prunes_to_prior_topk(monkeypatch):
+    st = random_tensor((30, 24, 36), 700, seed=2)
+    cands = ["ref", "alto", "chunked", "hetero"]
+    top2 = CostModelPrior().order(st, 4, cands, list(range(st.ndim)))[:2]
+    calls = _probe_counter(monkeypatch)
+    eng = build_engine(st, "auto", 4, plans=PlanCache(), candidates=cands,
+                       max_probes=2, **KW)
+    rep = eng.report
+    assert rep.prior_order is not None and rep.prior_order[:2] == top2
+    assert set(rep.timings) <= set(top2)
+    pruned = {n for n, why in rep.skipped.items() if "pruned" in why}
+    assert pruned == set(cands) - set(top2)
+    # the probe budget actually bounds measurement work
+    assert len(calls) <= 2 * st.ndim
+    # report invariant: every candidate is accounted for
+    assert set(rep.timings) | set(rep.skipped) == set(cands)
+    with pytest.raises(ValueError, match="max_probes"):
+        build_engine(st, "auto", 4, plans=PlanCache(), candidates=cands,
+                     max_probes=0, **KW)
+
+
+# ---------------------------------------------------------------------------
+# Ride-along bugfixes
+# ---------------------------------------------------------------------------
+
+def test_autotuned_engine_rejects_stale_mode_with_valueerror():
+    """A mode index outside the tuned set must raise a ValueError naming the
+    mode and the valid range — not a bare KeyError from the closure."""
+    st = random_tensor((20, 16, 24), 300, seed=5)
+    eng = build_engine(st, "auto", 3, plans=PlanCache(), **KW)
+    factors = tuple(jnp.zeros((d, 3), jnp.float32) for d in st.shape)
+    with pytest.raises(ValueError, match=r"mode 3.*valid modes: 0\.\.2"):
+        eng(factors, 3)
+
+
+def test_explicit_zero_capacity_rejected():
+    st = random_tensor((20, 16, 24), 300, seed=5)
+    with pytest.raises(ValueError, match="capacity must be >= 1"):
+        EngineContext(st=st, rank=4, capacity=0)
+    with pytest.raises(ValueError, match="capacity must be >= 1"):
+        build_engine(st, "chunked", 4, chunk_shape=(8, 8, 8), capacity=0)
+    # capacity=None still defers to the partition decider
+    ctx = EngineContext(st=st, rank=4, plans=PlanCache())
+    cs, cap = ctx.resolve_chunking()
+    assert cap is None or cap >= 1
+
+
+def test_fit_fast_path_matches_slow_path():
+    """cp_als now reuses the last mode's MTTKRP for the fit inner product;
+    it must agree with the explicit reconstruct_nnz slow path to ~1e-5."""
+    st = random_tensor((18, 14, 16), 500, seed=12)
+    res = cp_als(st, 5, n_iters=3, engine="ref", seed=13, track_diff=False)
+    slow = fit_value(st, res.factors, res.lam)   # mlast=None → slow path
+    assert abs(res.fit_history[-1] - slow) < 1e-5
+
+
+def test_fit_fast_path_gated_off_for_approximate_engines():
+    """Lossy (fixed-point) and lock-free engines must report the exact
+    factors-only fit: kernel noise in the MTTKRP output never biases the
+    accuracy metric (fig6's comparison depends on this)."""
+    st = random_tensor((18, 14, 16), 500, seed=12)
+    kw = dict(chunk_shape=(8, 8, 8), capacity=64, track_diff=False)
+    for engine_kw in (dict(engine="fixed", fixed_preset="int7"),
+                      dict(engine="chunked", lockfree_mode=True)):
+        res = cp_als(st, 4, n_iters=2, seed=13, plans=PlanCache(),
+                     **engine_kw, **kw)
+        slow = fit_value(st, res.factors, res.lam)
+        assert abs(res.fit_history[-1] - slow) < 1e-6, engine_kw

@@ -43,7 +43,7 @@ def test_manual_sp_matches_baseline_fwd_bwd():
         # global relative error: bf16 reduction-order noise scales with the
         # overall gradient magnitude, so compare against the global norm
         num = sum(float(jnp.sum(jnp.square((a - b).astype(jnp.float32))))
-                  for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)))
+                  for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1), strict=True))
         den = sum(float(jnp.sum(jnp.square(a.astype(jnp.float32))))
                   for a in jax.tree.leaves(g0))
         print(json.dumps([float(l0), float(l1), (num / den) ** 0.5]))

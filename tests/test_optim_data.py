@@ -73,7 +73,7 @@ def test_cp_compression_error_feedback_converges():
     state = {"err": jnp.zeros_like(w),
              "q": jax.random.normal(jax.random.key(0), (64, 8))}
     rels = []
-    for i in range(150):
+    for _ in range(150):
         g = w - target
         cg, state = compress_grad(g, state, axis_name=None)
         w = w - 1.0 * cg
@@ -111,7 +111,7 @@ def test_lockfree_mask_properties(p, t, g, seed):
             seen = {}
             for i in idxs:
                 seen.setdefault(int(rows[ti, i]), []).append(i)
-            for row, ii in seen.items():
+            for _row, ii in seen.items():
                 for i in ii[:-1]:
                     assert mask[ti, i] == 0.0
                 assert mask[ti, ii[-1]] == 1.0

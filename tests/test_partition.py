@@ -33,7 +33,7 @@ def test_chunking_preserves_every_nonzero(ndim, nnz, seed, dist):
         for i in range(c):
             got.append((tuple(coords[i]), float(ct.values[t, i])))
     want = sorted((tuple(c), float(v))
-                  for c, v in zip(st_.coords, st_.values))
+                  for c, v in zip(st_.coords, st_.values, strict=True))
     assert sorted(got) == want
 
 
