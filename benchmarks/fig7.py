@@ -16,7 +16,15 @@ import time
 import jax.numpy as jnp
 
 from repro.core import init_factors, table1_tensor
-from repro.engine import PlanCache, TuningStore, build_engine
+from repro.engine import (
+    CalibratedPrior,
+    CalibrationError,
+    PlanCache,
+    TuningStore,
+    build_engine,
+    default_prior,
+    ranking_accuracy,
+)
 
 from .common import save, table, timeit
 
@@ -28,6 +36,90 @@ HOST_PEAK_FLOPS = 48e9
 def mttkrp_flops(st, rank: int) -> float:
     # per nonzero: (N-1) hadamard mults + 1 value mult + 1 add, × rank
     return st.nnz * rank * (st.ndim + 1.0)
+
+
+def prior_eval(tstore: TuningStore, tensors: list[str], fast: bool) -> dict:
+    """Calibrated-vs-default prior scorecard over the store the suite just
+    populated, plus a store-less elided cold start per tensor (the
+    calibrated prior decides most modes from one anchor probe; only
+    boundary candidates re-probe).  CI gates on this: elision must probe
+    fewer than len(candidates) x ndim times without picking a clearly worse
+    backend, and the calibrated prior's top-1 agreement with the measured
+    winners must be at least the analytic default's."""
+    try:
+        calib = CalibratedPrior.from_store(tstore)
+    except CalibrationError as e:
+        print(f"[fig7] prior calibration unavailable: {e}")
+        # Always (over)write the scorecard: the CI gate must see *this*
+        # run's outcome, not a stale passing payload from a previous run.
+        save("fig7_prior", {})
+        return {}
+    for line in calib.calibration.summary().splitlines():
+        print(f"[fig7] {line}")
+    calib_hits, decisions = ranking_accuracy(tstore, calib)
+    default_hits, _ = ranking_accuracy(tstore, default_prior)
+    rows = []
+    for tname in tensors:
+        st = table1_tensor(tname, nnz=8000 if fast else None)
+        # Two store-less cold starts back to back: a full probe sweep as the
+        # live baseline (complete timings for every candidate on every
+        # mode), then the elided run under the calibrated prior.  Judging
+        # against the *live* sweep rather than the store keeps every elided
+        # decision verifiable and minimizes clock drift between the two.
+        plans = PlanCache()
+        full = build_engine(st, "auto", RANK, mem_bytes=256 * 1024,
+                            plans=plans, prior="default", elide=False)
+        # elide=True with a fixed moderate margin: this is the elision
+        # *demonstration*, and must exercise the mechanism even when the
+        # residual-derived production margin saturates at 2.0 (on these
+        # micro-tensors that keeps every candidate inside the boundary and
+        # elides nothing) or the model-selection guard kept analytic
+        # coefficients (used_fit=False turns the default policy off).
+        eng = build_engine(st, "auto", RANK, mem_bytes=256 * 1024,
+                           plans=plans, prior=calib, elide=True,
+                           elide_margin=1.35)
+        rep = eng.report
+        agree = ok = 0
+        for mode, fwin in full.report.winners.items():
+            picked = rep.winners.get(mode)
+            agree += picked == fwin
+            # The gate protects against elision *deciding without measuring*
+            # and being clearly wrong: a pick is ok when it matches, or when
+            # the full sweep's own timings put it within 2x of its winner
+            # (near-tied backends flip on timing noise; the sweep would
+            # have flipped too).
+            per = {b: t[mode] for b, t in full.report.timings.items()
+                   if mode in t}
+            ok += (picked == fwin
+                   or (picked in per and per[picked] <= 2.0 * per[fwin]))
+        rows.append(dict(
+            tensor=tname, prior=rep.prior_name,
+            probes_full=full.report.n_probes, probes_elided=rep.n_probes,
+            n_elided=rep.n_elided,
+            winners_agree=f"{agree}/{st.ndim}",
+            winners_ok=ok == st.ndim,
+        ))
+        print(f"[fig7] {tname} elided cold start: {rep.n_probes} probes vs "
+              f"{full.report.n_probes} full sweep, winners agree "
+              f"{agree}/{st.ndim}", flush=True)
+    payload = dict(
+        accuracy=dict(calibrated=calib_hits, default=default_hits,
+                      decisions=decisions),
+        residual=dict(mean_rel_err=calib.calibration.mean_rel_err,
+                      max_rel_err=calib.calibration.max_rel_err,
+                      n_observations=calib.calibration.n_observations),
+        fitted=calib.calibration.fitted,
+        # Coefficients kept at their analytic default (incl. the guard's
+        # whole-fit rejection) — without this a rejected fit reads as fitted.
+        fallbacks=list(calib.calibration.fallbacks),
+        tensors=rows,
+    )
+    print(f"\n== Fig. 7 prior scorecard: calibrated top-1 "
+          f"{calib_hits}/{decisions} vs default {default_hits}/{decisions} ==")
+    print(table(rows, ["tensor", "prior", "probes_full", "probes_elided",
+                       "n_elided", "winners_agree", "winners_ok"]))
+    save("fig7_prior", payload)
+    return payload
 
 
 def run(fast: bool = False, store: str | TuningStore | None = None):
@@ -107,6 +199,9 @@ def run(fast: bool = False, store: str | TuningStore | None = None):
     print(table(rows, ["tensor", "engine", "time_all_modes_ms",
                        "peak_fraction", "tune_ms", "tune_warm_ms"]))
     save("fig7", rows)
+    # The store now holds this run's measurements: score the calibrated
+    # prior against them and demonstrate cross-mode elision per tensor.
+    prior_eval(tstore, tensors, fast)
     return rows
 
 

@@ -65,6 +65,24 @@ def main() -> None:
         # Non-zero exit so CI gates on benchmark health.
         print(f"benchmark suites failed: {failed}", file=sys.stderr)
         sys.exit(1)
+
+    # What the invocation left behind for the next one: the store's entries
+    # are both warm-start winners and the calibration's training data.
+    obs = store.observations()
+    if obs:
+        from repro.engine import CalibratedPrior, CalibrationError, default_prior, ranking_accuracy
+        line = (f"autotune store {store.path}: {len(store)} entries, "
+                f"{len(obs)} observations")
+        try:
+            calib = CalibratedPrior.from_store(store)
+            ch, total = ranking_accuracy(store, calib)
+            dh, _ = ranking_accuracy(store, default_prior)
+            line += (f"; calibrated prior rel err "
+                     f"{calib.calibration.mean_rel_err:.0%}, top-1 "
+                     f"{ch}/{total} (default prior {dh}/{total})")
+        except CalibrationError as e:
+            line += f"; calibration unavailable ({e})"
+        print(line, flush=True)
     print(f"\nall benchmark suites passed: {only}", flush=True)
 
 

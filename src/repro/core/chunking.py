@@ -82,7 +82,7 @@ class ChunkedTensor:
         """(T, P, N) absolute coordinates (padding rows map inside chunk 0)."""
         return self.coords_rel + self.row_offsets()[:, None, :]
 
-    def pad_tasks(self, multiple: int) -> "ChunkedTensor":
+    def pad_tasks(self, multiple: int) -> ChunkedTensor:
         """Pad the task axis to a multiple (for even mesh sharding). Padding
         tasks point at chunk 0 with zero live nonzeros and zero values."""
         t = self.num_tasks

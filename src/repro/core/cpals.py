@@ -16,8 +16,10 @@ exactly as the paper leaves them on the CPU.  The MTTKRP engine is swappable
                        per (tensor, rank, mode) and dispatches to the winner;
                        pass store=True/path/TuningStore (forwarded via
                        **engine_kwargs) to persist winners across processes,
-                       and max_probes=k to cap cold-start probing to the
-                       cost-model prior's top-k
+                       max_probes=k to cap cold-start probing to the
+                       cost-model prior's top-k, and prior="calibrated" to
+                       fit the prior to the store's measurements (which also
+                       turns on cross-mode probe elision)
   engine=callable      custom: f(factors, mode) -> (I_mode, R)
 
 Normalization is L-infinity by default (paper §IV-C: uses the full [-1, 1]
@@ -29,7 +31,7 @@ import dataclasses
 import math
 import time
 import warnings
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -85,8 +87,13 @@ def reconstruct_nnz(factors, lam, coords) -> jnp.ndarray:
 
 def avg_abs_diff(st: SparseTensor, factors, lam, *, dense_limit: int = 1 << 22) -> float:
     """Paper Fig. 6 metric: mean |X - X̂| over all elements when the tensor is
-    small enough, else over the nonzeros only (as done for Delicious/Lbnl)."""
-    if math.prod(st.shape) <= dense_limit:
+    small enough, else over the nonzeros only (as done for Delicious/Lbnl).
+
+    The dense path builds einsum subscripts from "abcdefg", so it only
+    serves tensors up to 7 modes; higher orders take the nonzero-only path
+    regardless of size (a small 8-D tensor must not crash on a subscript
+    overrun)."""
+    if math.prod(st.shape) <= dense_limit and st.ndim <= 7:
         dense = jnp.asarray(st.to_dense())
         letters = "abcdefg"[: st.ndim]
         sub = ",".join(f"{c}r" for c in letters)

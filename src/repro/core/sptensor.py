@@ -52,7 +52,7 @@ class SparseTensor:
     def norm(self) -> float:
         return float(np.linalg.norm(self.values.astype(np.float64)))
 
-    def permuted(self, order: np.ndarray) -> "SparseTensor":
+    def permuted(self, order: np.ndarray) -> SparseTensor:
         return SparseTensor(self.coords[order], self.values[order], self.shape)
 
 

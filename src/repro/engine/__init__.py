@@ -14,13 +14,27 @@ Public entrypoint::
 """
 from __future__ import annotations
 
-from typing import Callable
+from collections.abc import Callable
 
 from . import backends as _backends  # noqa: F401 — registers the built-ins
 from .autotune import AutotuneReport, autotune_engine
-from .costmodel import CostModelPrior, default_prior, prior_order
+from .calibrate import (
+    CalibratedPrior,
+    CalibrationError,
+    CalibrationReport,
+    ranking_accuracy,
+)
+from .costmodel import (
+    CostModelPrior,
+    WorkloadStats,
+    byte_terms,
+    default_prior,
+    prior_order,
+)
 from .persist import (
     DEFAULT_STORE_ENV,
+    DEFAULT_TTL_ENV,
+    Observation,
     StoredEntry,
     TuningStore,
     WorkloadKey,
@@ -42,23 +56,31 @@ __all__ = [
     "AutotuneReport",
     "BackendSpec",
     "CacheStats",
+    "CalibratedPrior",
+    "CalibrationError",
+    "CalibrationReport",
     "CostModelPrior",
     "DEFAULT_STORE_ENV",
+    "DEFAULT_TTL_ENV",
     "Engine",
     "EngineContext",
+    "Observation",
     "PlanCache",
     "StoredEntry",
     "TuningStore",
     "WorkloadKey",
+    "WorkloadStats",
     "autotune_engine",
     "backend_table",
     "build_engine",
+    "byte_terms",
     "default_plan_cache",
     "default_prior",
     "device_fingerprint",
     "eligible_backends",
     "get_backend",
     "prior_order",
+    "ranking_accuracy",
     "register_backend",
     "registered_backends",
 ]
@@ -75,27 +97,36 @@ def build_engine(
     reps: int = 2,
     autotune_modes: list[int] | None = None,
     store: TuningStore | str | bool | None = None,
-    prior: CostModelPrior | None = None,
+    prior: CostModelPrior | str | None = None,
     max_probes: int | None = None,
+    elide: bool | None = None,
+    elide_margin: float | None = None,
     **options,
 ) -> Engine:
     """Build an MTTKRP engine through the registry.
 
-    method     — a registered backend name, ``"auto"`` (empirical selection
-                 over the eligible lossless backends), or a callable
-                 ``f(factors, mode)`` which is wrapped unchanged.
-    store      — autotuner persistence: ``True`` for the default store
-                 (``~/.cache/repro/autotune.json``, env
-                 ``REPRO_AUTOTUNE_CACHE`` overrides), a path, or a
-                 ``TuningStore``.  A workload+device fingerprint hit skips
-                 the probe phase and dispatches to the persisted winners.
-    prior      — cost-model prior ranking candidates on a cold start
-                 (default: the analytic memory-bound `default_prior`).
-    max_probes — cold-start probe budget: only the prior's top-k candidates
-                 are timed.
-    options    — EngineContext fields: mem_bytes, chunk_shape, capacity,
-                 fixed_preset, lockfree_mode, dense_fraction, mesh, reduce,
-                 interpret.
+    method       — a registered backend name, ``"auto"`` (empirical selection
+                   over the eligible lossless backends), or a callable
+                   ``f(factors, mode)`` which is wrapped unchanged.
+    store        — autotuner persistence: ``True`` for the default store
+                   (``~/.cache/repro/autotune.json``, env
+                   ``REPRO_AUTOTUNE_CACHE`` overrides), a path, or a
+                   ``TuningStore``.  A workload+device fingerprint hit skips
+                   the probe phase and dispatches to the persisted winners.
+    prior        — cold-start ranking model: a `CostModelPrior`,
+                   ``"default"`` (analytic coefficients), ``"calibrated"``
+                   (least-squares fit to the store's measured timings), or
+                   None — calibrate when the store holds enough
+                   observations, else the analytic default.
+    max_probes   — cold-start probe budget: only the prior's top-k
+                   candidates are timed.
+    elide        — cross-mode probe elision (see `autotune_engine`); default
+                   None enables it exactly when the prior is calibrated.
+    elide_margin — decision-boundary width for elision (default: the
+                   calibrated prior's residual-derived margin).
+    options      — EngineContext fields: mem_bytes, chunk_shape, capacity,
+                   fixed_preset, lockfree_mode, dense_fraction, mesh, reduce,
+                   interpret.
     """
     if callable(method):
         return Engine(getattr(method, "__name__", "custom"), method)
@@ -109,7 +140,7 @@ def build_engine(
         handle, _report = autotune_engine(
             ctx, candidates=candidates, warmup=warmup, reps=reps,
             modes=autotune_modes, store=store, prior=prior,
-            max_probes=max_probes)
+            max_probes=max_probes, elide=elide, elide_margin=elide_margin)
         return handle
 
     spec = get_backend(method)

@@ -13,8 +13,20 @@ a path, or `True` for the default `~/.cache/repro/autotune.json`) and the
 measured winners are persisted under a workload + device fingerprint; an
 exact-or-near fingerprint hit on a later run skips the probe phase entirely.
 On a cold start, `max_probes=` caps the probe budget to the top-k candidates
-of the analytic memory-bound prior (costmodel.py), so a fat candidate set
-doesn't mean a fat tuning bill.
+of the cost-model prior (costmodel.py), so a fat candidate set doesn't mean
+a fat tuning bill.
+
+The prior itself improves with use: once the store holds enough measured
+timings, the tuner fits the prior's coefficients to them
+(`calibrate.CalibratedPrior`) instead of trusting the analytic guesses —
+and a calibrated prior unlocks *cross-mode probe elision*: every candidate
+is probed on one representative mode, and the remaining modes are decided
+from the prior's per-mode byte ratios anchored to that measurement,
+re-probing only candidates whose prediction sits within a confidence margin
+of the per-mode decision boundary.  A cold start's probe count drops from
+`len(candidates) × ndim` toward `len(candidates)`, the same
+measure-once-predict-the-rest structure the paper uses for tensor
+placement.
 
 Lossy backends (fixed point) are excluded by default: number format is an
 accuracy choice (paper Fig. 6), execution strategy is a speed choice
@@ -29,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.cpals import init_factors
+from .calibrate import CalibratedPrior, CalibrationError
 from .costmodel import CostModelPrior, default_prior
 from .persist import StoredEntry, TuningStore, WorkloadKey, resolve_store
 from .registry import Engine, EngineContext, eligible_backends, get_backend
@@ -38,17 +51,22 @@ __all__ = ["AutotuneReport", "autotune_engine"]
 
 @dataclasses.dataclass
 class AutotuneReport:
-    """What the tuner measured (or recalled) and decided."""
+    """What the tuner measured (or recalled, or inferred) and decided."""
 
     winners: dict[int, str]               # mode -> backend name
-    timings: dict[str, dict[int, float]]  # backend -> mode -> best seconds
+    timings: dict[str, dict[int, float]]  # backend -> mode -> best MEASURED s
     candidates: list[str]                 # what was considered
     skipped: dict[str, str]               # backend -> reason (error/prune text)
     warmup: int
     reps: int
     source: str = "measured"              # "measured" | "persisted"
-    n_probes: int = 0                     # _time_call invocations this build
+    n_probes: int = 0                     # timing probes charged this build
+                                          # (candidates that raised are not)
     prior_order: list[str] | None = None  # cost-model ranking, when consulted
+    prior_name: str | None = None         # "default" | "calibrated" | "custom"
+    predicted: dict[str, dict[int, float]] = dataclasses.field(
+        default_factory=dict)             # anchored predictions (elision path)
+    n_elided: int = 0                     # (candidate, mode) probes skipped
     store_path: str | None = None         # persistence store, when used
 
     @property
@@ -60,12 +78,22 @@ class AutotuneReport:
     def summary(self) -> str:
         head = f"autotune: warmup={self.warmup} reps={self.reps}"
         if self.source != "measured":
-            head += f" source={self.source} probes={self.n_probes}"
-            if self.store_path:
-                head += f" store={self.store_path}"
+            head += f" source={self.source}"
+        head += f" probes={self.n_probes}"
+        if self.n_elided:
+            head += f" elided={self.n_elided}"
+        if self.prior_name:
+            head += f" prior={self.prior_name}"
+        if self.store_path:
+            head += f" store={self.store_path}"
         lines = [head]
         for name, per_mode in sorted(self.timings.items()):
             t = " ".join(f"m{m}={s * 1e3:.2f}ms" for m, s in sorted(per_mode.items()))
+            pred = self.predicted.get(name, {})
+            if pred:
+                t += "  " + " ".join(f"m{m}~{s * 1e3:.2f}ms"
+                                     for m, s in sorted(pred.items())
+                                     if m not in per_mode)
             lines.append(f"  {name:12s} {t}")
         for name, why in sorted(self.skipped.items()):
             lines.append(f"  {name:12s} skipped: {why.splitlines()[0]}")
@@ -83,6 +111,13 @@ def _time_call(engine, factors, mode: int, *, warmup: int, reps: int) -> float:
         jax.block_until_ready(engine(factors, mode))
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def _time_backend(name: str, engine, factors, mode: int, *,
+                  warmup: int, reps: int) -> float:
+    """Probe seam: identical to `_time_call` but carries the backend name so
+    tests can substitute deterministic per-backend timings."""
+    return _time_call(engine, factors, mode, warmup=warmup, reps=reps)
 
 
 def _dispatcher(built: dict, winners: dict[int, str], overall: str | None,
@@ -134,6 +169,42 @@ def _engine_from_entry(
     return Engine(f"auto:{report.chosen}", fn, context=ctx, report=report), report
 
 
+def _prior_label(prior: CalibratedPrior) -> str:
+    """A guard-rejected fit keeps the analytic coefficients — the label must
+    not read as if something was learned."""
+    return "calibrated" if prior.used_fit else "calibrated (analytic fallback)"
+
+
+def _resolve_prior(
+    prior: CostModelPrior | str | None,
+    store: TuningStore | None,
+) -> tuple[CostModelPrior, str]:
+    """Resolve a *validated* `prior=` argument (see `autotune_engine`, the
+    only caller) to a concrete prior instance + label.
+
+    None        — calibrate from the store when it holds enough observations
+                  for this device, else the analytic default.
+    "calibrated"— fit to the store; fall back to the default (with a
+                  labelled reason) only when the store is too thin yet.
+    "default"   — the analytic default, even with a fat store.
+    instance    — used as-is.
+    """
+    if isinstance(prior, CostModelPrior):
+        return prior, (_prior_label(prior)
+                       if isinstance(prior, CalibratedPrior) else "custom")
+    if prior == "default":
+        return default_prior, "default"
+    # None or "calibrated": calibrate when the store supports it.
+    if store is not None:
+        try:
+            fitted = CalibratedPrior.from_store(store)
+            return fitted, _prior_label(fitted)
+        except CalibrationError as e:
+            if prior == "calibrated":
+                return default_prior, f"default (calibration unavailable: {e})"
+    return default_prior, "default"
+
+
 def autotune_engine(
     ctx: EngineContext,
     *,
@@ -143,25 +214,45 @@ def autotune_engine(
     modes: list[int] | None = None,
     seed: int = 0,
     store: TuningStore | str | bool | None = None,
-    prior: CostModelPrior | None = None,
+    prior: CostModelPrior | str | None = None,
     max_probes: int | None = None,
+    elide: bool | None = None,
+    elide_margin: float | None = None,
 ) -> tuple[Engine, AutotuneReport]:
-    """Measure every candidate backend on `ctx.st` and return a dispatching
-    engine that routes each MTTKRP mode to its measured winner.
+    """Measure candidate backends on `ctx.st` and return a dispatching
+    engine that routes each MTTKRP mode to its measured (or, under elision,
+    confidently predicted) winner.
 
-    store      — persistence (see persist.py): `True` for the default
-                 `~/.cache/repro/autotune.json` (env `REPRO_AUTOTUNE_CACHE`
-                 overrides), a path, or a `TuningStore`.  A fingerprint hit
-                 skips probing and reuses the persisted winners; a cold
-                 start writes its measurements back.
-    prior      — cost-model prior used to rank candidates on a cold start
-                 (defaults to `costmodel.default_prior`).
-    max_probes — probe only the prior's top-k candidates on a cold start;
-                 the rest are recorded in `report.skipped` as pruned.
+    store        — persistence (see persist.py): `True` for the default
+                   `~/.cache/repro/autotune.json` (env `REPRO_AUTOTUNE_CACHE`
+                   overrides), a path, or a `TuningStore`.  A fingerprint hit
+                   skips probing and reuses the persisted winners; a cold
+                   start writes its measurements back.
+    prior        — cold-start ranking model: a `CostModelPrior` instance,
+                   `"default"` (analytic coefficients), `"calibrated"` (fit
+                   to the store's measurements), or None — which calibrates
+                   whenever the store holds enough observations and falls
+                   back to the analytic default otherwise.
+    max_probes   — probe only the prior's top-k candidates on a cold start;
+                   the rest are recorded in `report.skipped` as pruned.
+    elide        — cross-mode probe elision: probe every candidate on one
+                   representative mode, decide the remaining modes from the
+                   prior's anchored per-mode predictions, and re-probe only
+                   candidates within `elide_margin` of the per-mode decision
+                   boundary.  Default (None): on exactly when the resolved
+                   prior carries a deployed calibration fit — elision is
+                   only as good as the prior's cross-mode byte ratios, and
+                   a guard-rejected fit (`CalibratedPrior.used_fit=False`)
+                   does not qualify.
+    elide_margin — boundary width as a slowdown factor, >= 1.0 (default:
+                   the calibrated prior's residual-derived
+                   `suggested_margin`); 1.0 trusts the prior completely,
+                   larger values re-probe more.
 
     A backend that raises during build or timing is recorded in
     `report.skipped` and excluded — one broken strategy must not take the
-    decomposition down with it.
+    decomposition down with it — and its probes are not charged to
+    `report.n_probes`.
     """
     if candidates is None:
         candidates = [n for n in eligible_backends(lossless_only=True)
@@ -176,10 +267,27 @@ def autotune_engine(
         raise ValueError("no eligible backends to autotune over")
     if max_probes is not None and max_probes < 1:
         raise ValueError(f"max_probes must be >= 1 (got {max_probes})")
+    if elide_margin is not None and elide_margin < 1.0:
+        # A margin below 1 would exclude even the unmeasured predicted
+        # leader from re-probing, silently deciding every non-anchor mode
+        # with zero measurements — the opposite of a "tight margin".
+        raise ValueError(
+            f"elide_margin is a slowdown factor and must be >= 1.0 "
+            f"(got {elide_margin}); 1.0 trusts the prior completely, "
+            f"larger values re-probe more")
+    if not (prior is None or isinstance(prior, CostModelPrior)
+            or prior in ("default", "calibrated")):
+        raise ValueError(
+            f"prior must be 'default', 'calibrated', a CostModelPrior "
+            f"instance or None (got {prior!r})")
     if modes is None:
         modes = list(range(ctx.st.ndim))
 
     tuning_store = resolve_store(store)
+    if prior == "calibrated" and tuning_store is None:
+        raise ValueError(
+            "prior='calibrated' needs a store= to fit against (pass a "
+            "TuningStore/path, or a pre-built CalibratedPrior instance)")
     key = None
     if tuning_store is not None:
         key = WorkloadKey.from_tensor(ctx.st, ctx.rank, candidates)
@@ -190,55 +298,127 @@ def autotune_engine(
             if warm is not None:
                 return warm
 
-    # -- cold start: rank by the prior, probe (a budgeted subset), measure --
+    # -- cold start: rank by the prior, probe a budgeted subset ------------
+    prior_obj, prior_name = _resolve_prior(prior, tuning_store)
+    n_devices = len(jax.devices())
+    order = prior_obj.order(ctx.st, ctx.rank, list(candidates), modes,
+                            interpret=ctx.interpret, n_devices=n_devices)
     skipped: dict[str, str] = {}
-    probe_list = list(candidates)
-    order: list[str] | None = None
+    probe_list = list(order)
     if max_probes is not None and max_probes < len(probe_list):
-        ranking = prior if prior is not None else default_prior
-        order = ranking.order(
-            ctx.st, ctx.rank, probe_list, modes, interpret=ctx.interpret,
-            n_devices=len(jax.devices()))
         probe_list = order[:max_probes]
         for name in order[max_probes:]:
             skipped[name] = (
                 f"pruned by cost-model prior (max_probes={max_probes})")
 
+    # Elision is only as trustworthy as the prior's cross-mode ratios: the
+    # default policy requires a fit that was actually deployed (a guard-
+    # rejected fit keeps analytic coefficients with evidence they mis-rank
+    # this store — worse grounds for elision than no store at all).
+    do_elide = (elide if elide is not None
+                else isinstance(prior_obj, CalibratedPrior)
+                and prior_obj.used_fit)
+    margin = (elide_margin if elide_margin is not None
+              else getattr(prior_obj, "suggested_margin", 2.0))
+
     factors = [jnp.asarray(f) for f in init_factors(ctx.st.shape, ctx.rank, seed)]
     built: dict[str, object] = {}
     timings: dict[str, dict[int, float]] = {}
-    n_probes = 0
-    for name in probe_list:
+    predicted: dict[str, dict[int, float]] = {}
+    probe_counts: dict[str, int] = {}
+
+    def _probe(name: str, m: int) -> bool:
+        """Measure (name, mode); False + full disqualification on failure —
+        a candidate that raised anywhere contributes no timings, no winners
+        and no charged probes."""
         try:
-            eng = get_backend(name).build(ctx)
-            per_mode: dict[int, float] = {}
-            for m in modes:
-                per_mode[m] = _time_call(eng, factors, m, warmup=warmup,
-                                         reps=reps)
-                n_probes += 1
+            if name not in built:
+                built[name] = get_backend(name).build(ctx)
+            t = _time_backend(name, built[name], factors, m,
+                              warmup=warmup, reps=reps)
         except Exception as e:  # noqa: BLE001 — any failure disqualifies
             skipped[name] = f"{type(e).__name__}: {e}"
-            continue
-        built[name] = eng
-        timings[name] = per_mode
+            for book in (built, timings, predicted, probe_counts):
+                book.pop(name, None)
+            return False
+        timings.setdefault(name, {})[m] = t
+        probe_counts[name] = probe_counts.get(name, 0) + 1
+        return True
+
+    if not do_elide or len(modes) < 2 or len(probe_list) < 2:
+        for name in probe_list:
+            for m in modes:
+                if not _probe(name, m):
+                    break
+    else:
+        # Anchor phase: one representative mode for every candidate.  The
+        # anchor's job is to absorb each backend's absolute scale (the prior
+        # only has to get the *cross-mode byte ratios* right), so any mode
+        # works; the first requested one keeps the choice deterministic.
+        anchor = modes[0]
+        alive = [n for n in probe_list if _probe(n, anchor)]
+        for n in alive:
+            base = prior_obj.seconds(n, ctx.st, ctx.rank, anchor,
+                                     interpret=ctx.interpret,
+                                     n_devices=n_devices)
+            predicted[n] = {
+                m: timings[n][anchor]
+                * prior_obj.seconds(n, ctx.st, ctx.rank, m,
+                                    interpret=ctx.interpret,
+                                    n_devices=n_devices) / base
+                for m in modes if m != anchor}
+        # Per-mode elision: re-probe only candidates whose prediction sits
+        # within `margin` of the current best estimate; a lone leader means
+        # the mode is decided entirely by the prior.
+        for m in modes[1:]:
+            while True:
+                alive_now = [n for n in alive if n in timings]
+                if len(alive_now) <= 1:
+                    break
+                est = {n: timings[n].get(m, predicted[n][m])
+                       for n in alive_now}
+                best = min(est.values())
+                need = [n for n in alive_now
+                        if est[n] <= margin * best and m not in timings[n]]
+                if not need:
+                    break
+                for n in need:
+                    _probe(n, m)
 
     if not timings:
         raise RuntimeError(
             f"autotune: every candidate failed: {skipped}")
 
-    winners = {m: min(timings, key=lambda n, m=m: timings[n][m]) for m in modes}
+    survivors = sorted(timings)
+    winners: dict[int, str] = {}
+    for m in modes:
+        measured = [n for n in survivors if m in timings[n]]
+        if measured:
+            winners[m] = min(measured, key=lambda n, m=m: (timings[n][m], n))
+        else:  # fully elided mode: the prior's anchored prediction decides
+            winners[m] = min(
+                survivors,
+                key=lambda n, m=m: (predicted[n].get(m, float("inf")), n))
 
     # Untimed modes (when `modes` was restricted) fall back to the overall
-    # fastest backend summed over the timed modes; with every mode timed the
-    # fallback is unreachable and need not be retained.
+    # fastest backend over the requested modes — measured where available,
+    # anchored prediction where elided; with every mode covered by `winners`
+    # the fallback is unreachable and need not be retained.
     overall = None
     if set(winners) != set(range(ctx.st.ndim)):
-        overall = min(timings, key=lambda n: sum(timings[n].values()))
+        def total(n: str) -> float:
+            return sum(
+                timings[n].get(m, predicted.get(n, {}).get(m, float("inf")))
+                for m in modes)
+        overall = min(survivors, key=lambda n: (total(n), n))
 
+    n_probes = sum(probe_counts.get(n, 0) for n in survivors)
+    n_elided = sum(1 for n in survivors for m in modes if m not in timings[n])
     report = AutotuneReport(
         winners=winners, timings=timings, candidates=list(candidates),
         skipped=skipped, warmup=warmup, reps=reps,
         source="measured", n_probes=n_probes, prior_order=order,
+        prior_name=prior_name, predicted=predicted, n_elided=n_elided,
         store_path=tuning_store.path if tuning_store is not None else None)
 
     if tuning_store is not None and key is not None:

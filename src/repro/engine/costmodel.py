@@ -5,9 +5,10 @@ per nonzero against coordinate reads, factor-row gathers and output
 scatters), so candidate backends can be *ranked* — not timed — by the bytes
 they move per MTTKRP call.  The prior exists for one job: when the
 autotuner starts cold on a workload it has never measured, decide which
-candidates are worth spending probe budget on (`max_probes`).  It is a
-prior, not a predictor — measured timings always override it, and the
-persisted store (persist.py) means a workload pays the probe phase once.
+candidates are worth spending probe budget on (`max_probes`) and which
+modes are worth probing at all (cross-mode elision).  It is a prior, not a
+predictor — measured timings always override it, and the persisted store
+(persist.py) means a workload pays the probe phase once.
 
 The per-backend models mirror how each execution strategy touches memory:
 
@@ -26,18 +27,104 @@ The per-backend models mirror how each execution strategy touches memory:
                all-reduce and a per-call dispatch overhead.
   fixed        chunked with 16-bit values/factors (half the gather and
                value bytes).  Lossy — normally excluded upstream.
+
+Every model is decomposed into three byte components (`byte_terms`):
+
+    seconds = (fixed + chunk_padding·padded + chunk_padding·hetero_overhead·densified)
+              / bandwidth  +  dispatch(backend)
+
+which is *linear* in the reparametrized coefficients (1/bandwidth,
+chunk_padding/bandwidth, chunk_padding·hetero_overhead/bandwidth, and the
+per-backend dispatch terms) — exactly what `calibrate.py` needs to fit them
+by least squares against the tuning store's measured timings.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 
-from ..core.sptensor import SparseTensor
-
-__all__ = ["CostModelPrior", "default_prior", "prior_order"]
+__all__ = [
+    "CostModelPrior",
+    "WorkloadStats",
+    "byte_terms",
+    "default_prior",
+    "device_byte_terms",
+    "prior_order",
+]
 
 _IDX = 4   # int32 coordinate bytes
 _VAL = 4   # float32 value bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadStats:
+    """The tensor statistics the byte models consume — duck-compatible with
+    `SparseTensor` (shape/nnz/ndim), constructible from a persisted
+    `WorkloadKey` so calibration can evaluate the prior on workloads whose
+    tensors are long gone."""
+
+    shape: tuple[int, ...]
+    nnz: int
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @classmethod
+    def from_key(cls, key) -> WorkloadStats:
+        return cls(shape=tuple(key.shape), nnz=int(key.nnz))
+
+
+def byte_terms(name: str, st, rank: int, mode: int) -> tuple[float, float, float]:
+    """Decompose backend `name`'s mode-`mode` MTTKRP traffic on `st` into
+    ``(fixed, padded, densified)`` byte components:
+
+    - *fixed* bytes move regardless of chunking (coordinates, values,
+      gathers, the output);
+    - *padded* bytes are scaled by the chunk-capacity padding factor
+      (`CostModelPrior.chunk_padding`);
+    - *densified* bytes are additionally scaled by the dense-block traffic
+      multiplier (`CostModelPrior.hetero_overhead`).
+
+    `st` is anything with `.shape`, `.nnz`, `.ndim` (a `SparseTensor` or a
+    `WorkloadStats`).
+    """
+    n, d, r = st.nnz, st.ndim, rank
+    out = st.shape[mode] * r * _VAL
+    coords = n * d * _IDX
+    values = n * _VAL
+    gathers = n * (d - 1) * r * _VAL
+    base = coords + values + gathers
+    if name == "ref":
+        return base + 2 * n * r * _VAL + out, 0.0, 0.0
+    if name == "alto":
+        return coords + values + 0.75 * gathers + n * r * _VAL + out, 0.0, 0.0
+    if name in ("chunked", "pallas", "distributed"):
+        return out, base + n * r * _VAL, 0.0
+    if name == "hetero":
+        return out, 0.0, base + n * r * _VAL
+    if name == "fixed":
+        return coords + 0.5 * (values + gathers) + n * r * _VAL + out, 0.0, 0.0
+    # Unknown (user-registered) backend: assume COO-like traffic so it
+    # ranks mid-field and still gets probed under a generous budget.
+    return base + 2 * n * r * _VAL + out, 0.0, 0.0
+
+
+def device_byte_terms(name: str, st, rank: int, mode: int, *,
+                      n_devices: int = 1) -> tuple[float, float, float]:
+    """`byte_terms` adjusted for the device count: the distributed backend
+    splits its traffic across the real device count and adds an output
+    all-reduce (to the fixed component — it is not sharded).  This is the
+    single source of the per-observation decomposition: `CostModelPrior
+    .seconds` consumes it for prediction and `calibrate._design_terms` for
+    the training design matrix, so the two cannot drift apart."""
+    fixed, padded, densified = byte_terms(name, st, rank, mode)
+    if name == "distributed":
+        nd = max(1, n_devices)
+        fixed = fixed / nd + 2 * st.shape[mode] * rank * _VAL
+        padded /= nd
+        densified /= nd
+    return fixed, padded, densified
 
 
 @dataclasses.dataclass
@@ -46,7 +133,9 @@ class CostModelPrior:
 
     `bandwidth` is a sustained-stream guess (B/s) used only to convert bytes
     into comparable seconds so per-call dispatch overheads can be folded in;
-    absolute values are meaningless, only the ordering matters.
+    absolute values are meaningless, only the ordering matters.  All
+    coefficients here are the hard-coded defaults — `calibrate.CalibratedPrior`
+    replaces them with values fitted to the tuning store's measurements.
     """
 
     bandwidth: float = 2.0e10        # sustained memory bandwidth guess, B/s
@@ -55,46 +144,41 @@ class CostModelPrior:
     interpret_penalty: float = 200.0 # pallas interpret-mode slowdown factor
     dispatch_s: float = 1e-4         # per-call jit dispatch overhead
     distributed_dispatch_s: float = 2e-3  # shard_map per-call overhead
+    #: Per-backend dispatch overrides (seconds); missing backends fall back
+    #: to `dispatch_s` / `distributed_dispatch_s`.  Populated by calibration.
+    dispatch_overheads: dict[str, float] = dataclasses.field(default_factory=dict)
 
-    def bytes_moved(self, name: str, st: SparseTensor, rank: int,
-                    mode: int) -> float:
-        """Estimated bytes moved by one mode-`mode` MTTKRP for `name`."""
-        n, d, r = st.nnz, st.ndim, rank
-        out = st.shape[mode] * r * _VAL
-        coords = n * d * _IDX
-        values = n * _VAL
-        gathers = n * (d - 1) * r * _VAL
-        base = coords + values + gathers
-        if name == "ref":
-            return base + 2 * n * r * _VAL + out
-        if name == "alto":
-            return coords + values + 0.75 * gathers + n * r * _VAL + out
-        if name in ("chunked", "pallas"):
-            return self.chunk_padding * (base + n * r * _VAL) + out
-        if name == "hetero":
-            return (self.hetero_overhead
-                    * (self.chunk_padding * (base + n * r * _VAL)) + out)
+    def dispatch(self, name: str) -> float:
+        """Per-call dispatch overhead for backend `name`, in seconds."""
+        if name in self.dispatch_overheads:
+            return self.dispatch_overheads[name]
         if name == "distributed":
-            return self.chunk_padding * (base + n * r * _VAL) + out
-        if name == "fixed":
-            return coords + 0.5 * (values + gathers) + n * r * _VAL + out
-        # Unknown (user-registered) backend: assume COO-like traffic so it
-        # ranks mid-field and still gets probed under a generous budget.
-        return base + 2 * n * r * _VAL + out
+            return self.distributed_dispatch_s
+        return self.dispatch_s
 
-    def seconds(self, name: str, st: SparseTensor, rank: int, mode: int, *,
+    def bytes_moved(self, name: str, st, rank: int, mode: int) -> float:
+        """Estimated bytes moved by one mode-`mode` MTTKRP for `name`
+        (single-device traffic; `seconds` applies the device split)."""
+        fixed, padded, densified = byte_terms(name, st, rank, mode)
+        return (fixed + self.chunk_padding * padded
+                + self.chunk_padding * self.hetero_overhead * densified)
+
+    def seconds(self, name: str, st, rank: int, mode: int, *,
                 interpret: bool = True, n_devices: int = 1) -> float:
-        t = self.bytes_moved(name, st, rank, mode) / self.bandwidth
-        if name == "distributed":
-            t = t / max(2, n_devices) + self.distributed_dispatch_s
-            t += 2 * st.shape[mode] * rank * _VAL / self.bandwidth  # all-reduce
-        else:
-            t += self.dispatch_s
+        # device_byte_terms splits distributed traffic across the real
+        # device count (a single-device host gets no speedup — the mesh
+        # degenerates to one shard) and adds the output all-reduce.
+        fixed, padded, densified = device_byte_terms(
+            name, st, rank, mode, n_devices=n_devices)
+        t = (fixed + self.chunk_padding * padded
+             + self.chunk_padding * self.hetero_overhead * densified
+             ) / self.bandwidth
+        t += self.dispatch(name)
         if name == "pallas" and interpret:
             t *= self.interpret_penalty
         return t
 
-    def order(self, st: SparseTensor, rank: int, candidates: list[str],
+    def order(self, st, rank: int, candidates: list[str],
               modes: list[int] | None = None, *, interpret: bool = True,
               n_devices: int = 1) -> list[str]:
         """Candidates sorted cheapest-first by estimated total seconds over
@@ -112,7 +196,7 @@ class CostModelPrior:
 default_prior = CostModelPrior()
 
 
-def prior_order(st: SparseTensor, rank: int, candidates: list[str],
+def prior_order(st, rank: int, candidates: list[str],
                 modes: list[int] | None = None, **kw) -> list[str]:
     """Module-level convenience over `default_prior.order`."""
     return default_prior.order(st, rank, candidates, modes, **kw)

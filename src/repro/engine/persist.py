@@ -20,6 +20,14 @@ Default store path: `~/.cache/repro/autotune.json`, overridable with the
 `REPRO_AUTOTUNE_CACHE` environment variable or the `path` argument.  Writes
 are atomic (temp file + rename) so concurrent processes can share a store
 without corrupting it; last writer wins per fingerprint.
+
+Entries can expire: pass `ttl_s=` (or set `REPRO_AUTOTUNE_TTL` seconds) and
+`lookup` ignores entries older than the TTL, so a stale workload re-probes —
+the device fingerprint can't see silent environment drift (thermal state,
+background load, a driver update under the same version string), but a TTL
+bounds how long a drifted measurement keeps steering dispatch.  Expired
+entries are also excluded from `observations()`, the training-data iterator
+the cost-model calibration (calibrate.py) fits against.
 """
 from __future__ import annotations
 
@@ -28,6 +36,7 @@ import json
 import os
 import tempfile
 import time
+from typing import NamedTuple
 
 import jax
 
@@ -35,12 +44,19 @@ __all__ = [
     "TuningStore",
     "WorkloadKey",
     "StoredEntry",
+    "Observation",
     "device_fingerprint",
     "DEFAULT_STORE_ENV",
+    "DEFAULT_TTL_ENV",
 ]
 
 DEFAULT_STORE_ENV = "REPRO_AUTOTUNE_CACHE"
-_SCHEMA_VERSION = 1
+DEFAULT_TTL_ENV = "REPRO_AUTOTUNE_TTL"
+# v2 adds nothing to the entry layout (per-entry `created` timestamps were
+# already written by v1) but marks stores whose entries are TTL-aware and
+# near-match-deduplicated; v1 files load unchanged.
+_SCHEMA_VERSION = 2
+_READABLE_VERSIONS = (1, 2)
 
 
 def default_store_path() -> str:
@@ -49,6 +65,17 @@ def default_store_path() -> str:
         return env
     return os.path.join(
         os.path.expanduser("~"), ".cache", "repro", "autotune.json")
+
+
+def default_ttl_s() -> float | None:
+    env = os.environ.get(DEFAULT_TTL_ENV)
+    if not env:
+        return None
+    try:
+        ttl = float(env)
+    except ValueError:
+        return None
+    return ttl if ttl > 0 else None
 
 
 def device_fingerprint() -> dict[str, str]:
@@ -77,7 +104,7 @@ class WorkloadKey:
     device: tuple[tuple[str, str], ...]
 
     @classmethod
-    def from_tensor(cls, st, rank: int, candidates) -> "WorkloadKey":
+    def from_tensor(cls, st, rank: int, candidates) -> WorkloadKey:
         return cls(
             shape=tuple(int(d) for d in st.shape),
             nnz=int(st.nnz),
@@ -100,19 +127,22 @@ class WorkloadKey:
         }
 
     @classmethod
-    def from_json(cls, d: dict) -> "WorkloadKey":
+    def from_json(cls, d: dict) -> WorkloadKey:
         return cls(
             shape=tuple(int(x) for x in d["shape"]),
             nnz=int(d["nnz"]),
             density=float(d["density"]),
             ndim=int(d["ndim"]),
             rank=int(d["rank"]),
-            candidates=tuple(d["candidates"]),
+            # Sort exactly as `from_tensor` does: a hand-edited or foreign-
+            # order entry must still exact-match (and dedup) against the key
+            # built from the live candidate list.
+            candidates=tuple(sorted(str(c) for c in d["candidates"])),
             device=tuple(sorted((str(k), str(v))
                                 for k, v in d["device"].items())),
         )
 
-    def matches(self, other: "WorkloadKey", *, nnz_tol: float = 0.1) -> bool:
+    def matches(self, other: WorkloadKey, *, nnz_tol: float = 0.1) -> bool:
         """Exact-or-near: everything exact except nnz/density within a
         relative tolerance (the same tensor re-ingested rarely has the
         byte-identical nonzero count)."""
@@ -152,7 +182,7 @@ class StoredEntry:
         }
 
     @classmethod
-    def from_json(cls, d: dict) -> "StoredEntry":
+    def from_json(cls, d: dict) -> StoredEntry:
         return cls(
             key=WorkloadKey.from_json(d["key"]),
             winners={int(m): str(n) for m, n in d["winners"].items()},
@@ -165,24 +195,67 @@ class StoredEntry:
         )
 
 
+def _drop_shadowed(entries: list[StoredEntry]) -> list[StoredEntry]:
+    """Keep only the newest of any near-matching cluster: an entry recorded
+    later supersedes older entries its key near-matches (they would only
+    shadow each other in `lookup`).  Exact-duplicate keys are expected to be
+    merged by the caller already."""
+    kept: list[StoredEntry] = []
+    for e in sorted(entries, key=lambda e: e.created):
+        kept = [k for k in kept if not e.key.matches(k.key)]
+        kept.append(e)
+    return kept
+
+
+class Observation(NamedTuple):
+    """One measured (workload, backend, mode) → seconds data point — the
+    training rows the cost-model calibration fits against."""
+
+    key: WorkloadKey
+    backend: str
+    mode: int
+    seconds: float
+    created: float
+
+
 class TuningStore:
     """JSON-file store of autotune outcomes.
 
     Lookup is linear over entries (stores hold tens of workloads, not
     millions); exact fingerprint matches win over near matches, and among
     near matches the closest nnz wins.
+
+    `ttl_s` (default: the `REPRO_AUTOTUNE_TTL` env var, else no expiry)
+    bounds how long an entry steers dispatch: entries older than the TTL are
+    invisible to `lookup` and `observations`, so the workload re-probes and
+    the fresh measurement replaces the stale one.  A TTL of 0 or less means
+    "no expiry" here exactly as it does in the env var, so `ttl_s=0` is the
+    explicit opt-out when the environment sets a TTL.  Entries with no
+    recorded timestamp (`created == 0`, from pre-v2 stores) count as stale
+    whenever a TTL is in force — unknown age is not trusted age.
     """
 
-    def __init__(self, path: str | os.PathLike | None = None):
+    def __init__(self, path: str | os.PathLike | None = None, *,
+                 ttl_s: float | None = None):
         self.path = os.fspath(path) if path is not None else default_store_path()
+        if ttl_s is not None:
+            self.ttl_s = ttl_s if ttl_s > 0 else None
+        else:
+            self.ttl_s = default_ttl_s()
         self._entries: list[StoredEntry] | None = None  # lazy-loaded
+
+    def expired(self, entry: StoredEntry, *, now: float | None = None) -> bool:
+        if self.ttl_s is None:
+            return False
+        now = time.time() if now is None else now
+        return (now - entry.created) > self.ttl_s
 
     # -- I/O ---------------------------------------------------------------
     def _read_disk(self) -> list[StoredEntry]:
         try:
             with open(self.path) as f:
                 raw = json.load(f)
-            if isinstance(raw, dict) and raw.get("version") == _SCHEMA_VERSION:
+            if isinstance(raw, dict) and raw.get("version") in _READABLE_VERSIONS:
                 return [StoredEntry.from_json(e) for e in raw.get("entries", [])]
         except FileNotFoundError:
             pass
@@ -205,7 +278,7 @@ class TuningStore:
         # "last writer wins" hold per fingerprint rather than per file.)
         by_key = {e.key: e for e in self._read_disk()}
         by_key.update({e.key: e for e in self._load()})
-        self._entries = list(by_key.values())
+        self._entries = _drop_shadowed(list(by_key.values()))
         payload = {
             "version": _SCHEMA_VERSION,
             "entries": [e.to_json() for e in self._entries],
@@ -232,10 +305,14 @@ class TuningStore:
         return list(self._load())
 
     def lookup(self, key: WorkloadKey, *, nnz_tol: float = 0.1) -> StoredEntry | None:
-        """Exact-or-near fingerprint match (see `WorkloadKey.matches`)."""
+        """Exact-or-near fingerprint match (see `WorkloadKey.matches`),
+        ignoring entries past the store's TTL — stale winners re-probe."""
+        now = time.time()
         best: StoredEntry | None = None
         best_dist = float("inf")
         for e in self._load():
+            if self.expired(e, now=now):
+                continue
             if e.key == key:
                 return e
             if key.matches(e.key, nnz_tol=nnz_tol):
@@ -244,17 +321,43 @@ class TuningStore:
                     best, best_dist = e, dist
         return best
 
+    def observations(self, *, device: dict[str, str] | None = None,
+                     include_expired: bool = False) -> list[Observation]:
+        """Flatten every persisted timing into (key, backend, mode, seconds)
+        training rows.  `device` filters to entries measured on one device
+        fingerprint (pass `device_fingerprint()` for this host); expired
+        entries are excluded unless `include_expired` — stale timings are no
+        better as training data than as dispatch decisions."""
+        want = tuple(sorted(device.items())) if device is not None else None
+        now = time.time()
+        rows: list[Observation] = []
+        for e in self._load():
+            if not include_expired and self.expired(e, now=now):
+                continue
+            if want is not None and e.key.device != want:
+                continue
+            for backend, per_mode in e.timings.items():
+                for mode, t in per_mode.items():
+                    rows.append(Observation(e.key, backend, int(mode),
+                                            float(t), e.created))
+        return rows
+
     def record(self, key: WorkloadKey, winners: dict[int, str],
                timings: dict[str, dict[int, float]], *,
                overall: str | None = None, warmup: int = 1, reps: int = 2,
                save: bool = True) -> StoredEntry:
-        """Insert or replace the entry for an exact fingerprint."""
+        """Insert the entry for `key`, replacing the exact fingerprint AND
+        any near-match it supersedes: without the latter, repeated
+        decompositions of a slowly drifting tensor (nnz creeping within the
+        ±10% near-match window) accumulate entries that shadow each other in
+        `lookup`, growing the store without bound."""
         entry = StoredEntry(key=key, winners=dict(winners),
                             timings={n: dict(p) for n, p in timings.items()},
                             overall=overall, warmup=warmup, reps=reps,
                             created=time.time())
         entries = self._load()
-        self._entries = [e for e in entries if e.key != key] + [entry]
+        self._entries = [e for e in entries
+                         if e.key != key and not key.matches(e.key)] + [entry]
         if save:
             self.save()
         return entry

@@ -15,7 +15,7 @@ iteration, with chunking shared through ``ctx.plans`` (see plan.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 
