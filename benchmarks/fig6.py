@@ -13,8 +13,8 @@ from __future__ import annotations
 
 import time
 
-from repro.core import avg_abs_diff, cp_als, table1_tensor
-from repro.engine import PlanCache
+from repro.core import cp_als, table1_tensor
+from repro.engine import PlanCache, candidate_lossless
 
 from .common import save, table
 
@@ -23,9 +23,63 @@ FORMATS = [("float", "chunked", None), ("int7", "fixed", "int7"),
            ("int15-12", "fixed", "int15-12")]
 RANK = 10
 ITERS = 5
+#: The Fig.-6 format study as an autotune candidate space: the chunked
+#: execution strategy in float against every fixed-point preset of the same
+#: strategy — the paper's accuracy-vs-speed question, decided empirically
+#: per workload under an explicit error budget.
+TUNE_CANDIDATES = ["chunked", "fixed:int3", "fixed:int7", "fixed:int15-12"]
 
 
-def run(fast: bool = False):
+def _tune_rows(iters: int, fast: bool, accuracy_budget: float | None):
+    """Accuracy-budgeted format autotuning over the fig6 workloads.
+
+    Two passes per tensor: `budget=None` (the regression guard — default
+    candidates, so no lossy backend may ever win) and, when an
+    `--accuracy-budget` was given, a budgeted pass over `TUNE_CANDIDATES`
+    where each fixed-point preset competes under its measured error.  The
+    CI `format-autotune` job gates on these rows."""
+    rows = []
+    budgets = [None] + ([accuracy_budget] if accuracy_budget is not None else [])
+    for tname in TENSORS:
+        st = table1_tensor(tname, nnz=8000 if fast else None)
+        plans = PlanCache()
+        for budget in budgets:
+            kw = dict(engine="auto", seed=0, mem_bytes=256 * 1024, plans=plans)
+            if budget is not None:
+                kw.update(accuracy_budget=budget, candidates=TUNE_CANDIDATES)
+            res = cp_als(st, RANK, n_iters=iters, **kw)
+            rep = res.tune_report
+            picked = {str(m): w for m, w in sorted(rep.winners.items())}
+            lossy_picks = sorted({w for w in rep.winners.values()
+                                  if not candidate_lossless(w)})
+            winner_err = max(
+                (e for w in lossy_picks
+                 for e in rep.errors.get(w, {}).values()), default=None)
+            rows.append(dict(
+                tensor=tname, fmt="autotune",
+                budget=budget,
+                engine=res.engine,
+                picked=picked,
+                lossy_picks=lossy_picks,
+                winner_max_error=winner_err,
+                within_budget=(winner_err is None
+                               or (budget is not None and winner_err <= budget)),
+                errors={c: round(max(per.values()), 6)
+                        for c, per in rep.errors.items()},
+                rejected={c: why for c, why in rep.skipped.items()
+                          if "accuracy budget" in why},
+                candidates=list(rep.candidates),
+                avg_abs_diff=round(res.diff_history[-1], 6),
+                fit=round(res.fit_history[-1], 4),
+                quant_error=res.quant_error,
+            ))
+            print(f"[fig6] {tname} autotune budget={budget}: {res.engine} "
+                  f"lossy_picks={lossy_picks or '-'} "
+                  f"winner_err={winner_err}", flush=True)
+    return rows
+
+
+def run(fast: bool = False, accuracy_budget: float | None = None):
     rows = []
     iters = 2 if fast else ITERS
     for tname in TENSORS:
@@ -72,6 +126,14 @@ def run(fast: bool = False):
                         + ("OK" if rel < 0.05 else "DIVERGES"))
             print(f"[claim] {tname} (mode-{modes.get(tname, 3)}): "
                   f"|{fmt} - float| rel diff = {rel:.3%}{mark}")
+
+    # Accuracy-budgeted format autotuning: the same trade-off, decided by
+    # the tuner under an explicit error budget (CI gates on these rows).
+    tune = _tune_rows(iters, fast, accuracy_budget)
+    rows.extend(tune)
+    print("\n== Fig. 6: accuracy-budgeted format autotuning ==")
+    print(table(tune, ["tensor", "budget", "engine", "lossy_picks",
+                       "winner_max_error", "within_budget", "fit"]))
     save("fig6", rows)
     return rows
 

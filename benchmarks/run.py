@@ -15,7 +15,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="reduced nnz/iters (CI mode)")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of suites to run; unknown "
+                         "names abort before any suite runs")
+    ap.add_argument("--accuracy-budget", type=float, default=None,
+                    help="max per-mode MTTKRP relative error for the fig6 "
+                         "format-autotuning rows: admits fixed-point preset "
+                         "candidates to the tuner, each policed against "
+                         "this budget (CI gates on the resulting "
+                         "fig6.json rows)")
     ap.add_argument("--store", default=None,
                     help="autotune persistence store path, shared by every "
                          "suite that tunes; repeat invocations against the "
@@ -40,15 +48,20 @@ def main() -> None:
     store = TuningStore(store_path)
     suites = {
         "table1": lambda: table1.run(),
-        "fig6": lambda: fig6.run(fast=args.fast),
+        "fig6": lambda: fig6.run(fast=args.fast,
+                                 accuracy_budget=args.accuracy_budget),
         "fig7": lambda: fig7.run(fast=args.fast, store=store),
         "fig8_9": lambda: fig8_9.run(fast=args.fast),
     }
-    only = args.only.split(",") if args.only else list(suites)
-    unknown = [n for n in only if n not in suites]
+    # Validate the whole --only list before running anything: a typo'd name
+    # ("fig8" for "fig8_9", a stray comma) must abort with the valid names,
+    # not silently run the recognizable subset and exit 0.
+    only = ([t.strip() for t in args.only.split(",")] if args.only
+            else list(suites))
+    unknown = sorted({repr(n) for n in only if n not in suites})
     if unknown:
-        print(f"unknown benchmark suites: {unknown}; "
-              f"available: {sorted(suites)}", file=sys.stderr)
+        print(f"unknown benchmark suite(s): {', '.join(unknown)}; "
+              f"valid names: {', '.join(sorted(suites))}", file=sys.stderr)
         sys.exit(2)
     failed = []
     for name in only:

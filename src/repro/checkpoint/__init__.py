@@ -1,1 +1,1 @@
-from .ckpt import save_checkpoint, restore_checkpoint, latest_step, AsyncCheckpointer
+from .ckpt import AsyncCheckpointer, latest_step, restore_checkpoint, save_checkpoint

@@ -1,15 +1,15 @@
 """PRISM core: chunked sparse tensor format, hierarchical partitioning,
 fixed-point spMTTKRP, CP-ALS, heterogeneous + distributed execution."""
-from .sptensor import SparseTensor, random_tensor, table1_tensor, TABLE1
 from .chunking import ChunkedTensor, chunk_tensor, replication_stats
-from .partition import PartitionPlan, decide_partition
-from .qformat import QFormat, Q5_3, Q9_7, Q17_15, value_qformat, FIXED_PRESETS
-from .mttkrp import (
-    mttkrp_coo,
-    mttkrp_chunked,
-    mttkrp_coo_fixed,
-    mttkrp_chunked_fixed,
-)
-from .cpals import cp_als, CPResult, make_engine, init_factors, avg_abs_diff, fit_value
-from .hetero import split_tasks, mttkrp_hetero, HeteroSplit
+from .cpals import CPResult, avg_abs_diff, cp_als, fit_value, init_factors, make_engine
 from .distributed import DistributedMTTKRP, distributed_mttkrp_fn
+from .hetero import HeteroSplit, mttkrp_hetero, split_tasks
+from .mttkrp import (
+    mttkrp_chunked,
+    mttkrp_chunked_fixed,
+    mttkrp_coo,
+    mttkrp_coo_fixed,
+)
+from .partition import PartitionPlan, decide_partition
+from .qformat import FIXED_PRESETS, Q17_15, Q5_3, Q9_7, QFormat, value_qformat
+from .sptensor import TABLE1, SparseTensor, random_tensor, table1_tensor

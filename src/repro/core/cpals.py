@@ -58,6 +58,14 @@ class CPResult:
     diff_history: list[float]
     iter_times: list[float]
     engine: str
+    #: Measured MTTKRP relative error of the quantized (lossy) engine that
+    #: produced the factors — the autotuner's per-mode error measurements
+    #: when available, else one direct comparison against the float COO
+    #: reference on the final factors.  None for exact engines.
+    quant_error: float | None = None
+    #: The autotuner's report (winners, timings, errors) when engine="auto"
+    #: built the engine in this call; None otherwise.
+    tune_report: object | None = None
 
 
 def init_factors(shape, rank: int, seed: int = 0) -> list[jnp.ndarray]:
@@ -113,12 +121,12 @@ def fit_value(st: SparseTensor, factors, lam, mlast=None, last_mode=None) -> flo
     for g in grams:
         had = had * g
     norm_approx2 = float(jnp.sum(had))
-    if mlast is not None and last_mode is not None:
-        inner = float(jnp.sum(mlast * (jnp.asarray(factors[last_mode]) * jnp.asarray(lam)[None, :])))
-    else:
-        inner = float(
-            jnp.dot(reconstruct_nnz(factors, lam, jnp.asarray(st.coords)), jnp.asarray(st.values))
-        )
+    inner = (
+        float(jnp.sum(mlast * (jnp.asarray(factors[last_mode])
+                               * jnp.asarray(lam)[None, :])))
+        if mlast is not None and last_mode is not None
+        else float(jnp.dot(reconstruct_nnz(factors, lam, jnp.asarray(st.coords)),
+                           jnp.asarray(st.values))))
     resid = max(norm_x2 - 2 * inner + norm_approx2, 0.0)
     return 1.0 - math.sqrt(resid) / max(math.sqrt(norm_x2), 1e-30)
 
@@ -153,7 +161,8 @@ def make_engine(
 def _exact_mttkrp(eng) -> bool:
     """True when the engine's MTTKRP output is the exact float operand, so
     the fit fast path (inner product from `mlast`) matches the slow path.
-    Lossy backends (fixed point) and lock-free collision dropping produce
+    Lossy backends (fixed point — whether named "fixed" or as a preset
+    candidate id like "fixed:int7") and lock-free collision dropping produce
     approximate MTTKRPs — their noise must not bias the reported fit, so
     they keep the factors-only slow path."""
     ctx = getattr(eng, "context", None)
@@ -164,11 +173,55 @@ def _exact_mttkrp(eng) -> bool:
         return spec.lossless
     report = getattr(eng, "report", None)
     if report is not None:  # autotuned: every dispatched winner must be exact
-        from ..engine import registered_backends
-        regs = registered_backends()
-        return all(n in regs and regs[n].lossless
-                   for n in set(report.winners.values()))
+        from ..engine import candidate_lossless
+        return all(candidate_lossless(n) for n in set(report.winners.values()))
     return False  # bare callable: nothing is known about its output
+
+
+def _lossy_winners(eng) -> list[str]:
+    """The quantized candidates an engine dispatches to: the spec itself for
+    an explicit lossy engine, the lossy subset of the autotuned winners."""
+    spec = getattr(eng, "spec", None)
+    if spec is not None:
+        return [] if spec.lossless else [eng.name]
+    report = getattr(eng, "report", None)
+    if report is not None:
+        from ..engine import candidate_lossless
+        return [n for n in sorted(set(report.winners.values()))
+                if not candidate_lossless(n)]
+    return []
+
+
+def _measured_quant_error(eng, st: SparseTensor, factors) -> float | None:
+    """Measured MTTKRP relative error of a lossy engine, for CPResult.
+
+    Prefers the autotuner's per-mode error probes (measured against the
+    float reference during tuning); without them — an explicit fixed-point
+    engine, or a legacy lossy candidate admitted with no budget — compares
+    the engine's last-mode output against the float COO reference on the
+    final factors directly."""
+    lossy = _lossy_winners(eng)
+    if not lossy:
+        return None
+    report = getattr(eng, "report", None)
+    mode = st.ndim - 1
+    if report is not None:
+        errs = [e for n in lossy
+                for e in getattr(report, "errors", {}).get(n, {}).values()]
+        if errs:
+            return max(errs)
+        # No recorded errors (legacy lossy candidate, no budget): measure a
+        # mode the lossy winner actually serves — the dispatcher may route
+        # other modes to a lossless backend, whose float noise would be
+        # reported as "quantization error".
+        mode = max(m for m, w in report.winners.items() if w in lossy)
+    jfactors = [jnp.asarray(f) for f in factors]
+    from .mttkrp import mttkrp_coo
+    ref = mttkrp_coo(tuple(jfactors), jnp.asarray(st.coords),
+                     jnp.asarray(st.values), mode=mode, out_dim=st.shape[mode])
+    out = jnp.asarray(eng(jfactors, mode))
+    return float(jnp.linalg.norm(out - ref)
+                 / (jnp.linalg.norm(ref) + 1e-30))
 
 
 def cp_als(
@@ -181,18 +234,31 @@ def cp_als(
     seed: int = 0,
     track_diff: bool = True,
     tol: float | None = None,
+    accuracy_budget: float | None = None,
     **engine_kwargs,
 ) -> CPResult:
+    """`accuracy_budget` (with engine="auto") admits fixed-point preset
+    candidates to the autotuner, each held to this max per-mode MTTKRP
+    relative error — the paper's Fig. 6 format trade-off made empirically,
+    per workload.  The result's `quant_error` reports the measured
+    quantization error whenever a lossy engine produced the factors, and
+    the fit fast path stays disabled for it (quantization noise must not
+    bias the reported fit)."""
     n = st.ndim
     factors = init_factors(st.shape, rank, seed)
     lam = jnp.ones((rank,), jnp.float32)
     if callable(engine):
+        if accuracy_budget is not None:
+            raise ValueError(
+                "accuracy_budget only applies to engine='auto'; a prebuilt "
+                "engine has already made its format decision")
         eng = engine
         eng_name = getattr(engine, "name", None) or getattr(
             engine, "__name__", "custom")
     else:
         from ..engine import build_engine
-        eng = build_engine(st, engine, rank, **engine_kwargs)
+        eng = build_engine(st, engine, rank,
+                           accuracy_budget=accuracy_budget, **engine_kwargs)
         eng_name = eng.name  # e.g. "chunked", "auto:hetero"
 
     fit_fast = _exact_mttkrp(eng)
@@ -235,4 +301,6 @@ def cp_als(
     return CPResult(
         [np.asarray(f) for f in factors], np.asarray(lam),
         fit_history, diff_history, iter_times, eng_name,
+        quant_error=_measured_quant_error(eng, st, factors),
+        tune_report=getattr(eng, "report", None),
     )

@@ -65,13 +65,11 @@ def decide_partition(
     tensor_density = st.density
 
     # Rank partitioning first (paper: favored — no replication).  Each rank
-    # partition handles `rank_block` columns of every factor matrix.
-    if rank_axis is not None:
-        n_rank = rank_axis
-    else:
-        # As many rank partitions as possible while one tensor partition can
-        # still use all devices; the decider below refines tensor partitions.
-        n_rank = max(1, min(rank, n_devices))
+    # partition handles `rank_block` columns of every factor matrix; default:
+    # as many rank partitions as possible while one tensor partition can
+    # still use all devices (the decider below refines tensor partitions).
+    n_rank = (rank_axis if rank_axis is not None
+              else max(1, min(rank, n_devices)))
     rank_block = -(-rank // n_rank)
 
     chunk_shape = [int(d) for d in st.shape]

@@ -23,7 +23,17 @@ import math
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["QFormat", "Q5_3", "Q9_7", "Q17_15", "value_qformat", "FIXED_PRESETS"]
+__all__ = [
+    "CROSS_MODE_SLACK",
+    "FIXED_PRESETS",
+    "Q5_3",
+    "Q9_7",
+    "Q17_15",
+    "QFormat",
+    "cross_mode_error_bound",
+    "preset_error_bound",
+    "value_qformat",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +71,12 @@ class QFormat:
         return np.int32
 
     @property
+    def max_abs_error(self) -> float:
+        """Worst-case round-trip error for an in-range value: round-to-nearest
+        quantization is off by at most half a step, 1/(2·scale)."""
+        return 1.0 / (2 * self.scale)
+
+    @property
     def max_int(self) -> int:
         return (1 << (self.storage_bits - 1)) - 1
 
@@ -94,6 +110,59 @@ FIXED_PRESETS: dict[str, tuple[QFormat, int]] = {
     "int7": (Q9_7, 0),
     "int15-12": (Q17_15, 3),
 }
+
+
+#: Headroom when extrapolating a measured anchor-mode MTTKRP error to the
+#: un-measured modes.  The quantization noise itself is mode-uniform (the
+#: factors are quantized identically whichever mode is solved for), but the
+#: gather/accumulate pattern — and so how rounding errors align — changes
+#: with the mode; a 2x cushion over the worst measured mode covers that
+#: rearrangement without surrendering to the (much looser) analytic bound.
+CROSS_MODE_SLACK = 2.0
+
+
+def preset_error_bound(preset: str, ndim: int, *, value_frac: int = 7) -> float:
+    """First-order element-wise estimate of the relative error of one
+    fixed-point MTTKRP (paper Alg. 2) under `FIXED_PRESETS[preset]`, for an
+    `ndim`-mode tensor with L∞-normalized factors.
+
+    Three independent rounding sources add at first order:
+      * each of the `ndim - 1` gathered factor values carries up to
+        `1/(2·scale)` quantization error on a magnitude-≤1 value;
+      * the tensor value is quantized to a runtime 16-bit format with
+        `value_frac` fractional bits (`value_qformat`; 7 is the floor the
+        synthetic [0, 1) tensors see);
+      * dequantizing the accumulator truncates `prec_shift` extra bits,
+        worth `2^prec_shift / (2·scale)`.
+
+    This is a per-*element* estimate, NOT a guaranteed bound on the
+    output-norm relative error (rows whose exact output is small amplify
+    absolute rounding noise arbitrarily) — it orders the presets correctly
+    and seeds the no-measurement fallback, but the autotuner's measured
+    anchor error always overrides it (`cross_mode_error_bound`).
+    """
+    qf, prec_shift = FIXED_PRESETS[preset]
+    factor_err = (ndim - 1) * qf.max_abs_error
+    value_err = 0.5 ** (value_frac + 1)
+    dequant_err = (1 << prec_shift) * qf.max_abs_error
+    return factor_err + value_err + dequant_err
+
+
+def cross_mode_error_bound(
+    measured: dict[int, float], preset: str, ndim: int, *,
+    value_frac: int = 7,
+) -> float:
+    """Bound the relative MTTKRP error of the modes *not* measured from the
+    ones that were: the worst measured mode times `CROSS_MODE_SLACK` — the
+    noise source (factor quantization) is mode-uniform, the slack covers how
+    the gather/accumulate pattern rearranges it.  Only with no measurement
+    at all (which the autotuner never allows for an admitted lossy
+    candidate — the anchor probe always measures) does the analytic
+    estimate stand in, with the same headroom."""
+    if measured:
+        return CROSS_MODE_SLACK * max(measured.values())
+    return CROSS_MODE_SLACK * preset_error_bound(preset, ndim,
+                                                 value_frac=value_frac)
 
 
 def value_qformat(values: np.ndarray, storage_bits: int = 16) -> QFormat:

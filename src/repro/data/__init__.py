@@ -1,1 +1,1 @@
-from .pipeline import SyntheticTokens, SyntheticBatches, host_shard_slice
+from .pipeline import SyntheticBatches, SyntheticTokens, host_shard_slice

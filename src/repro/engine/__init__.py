@@ -38,6 +38,7 @@ from .persist import (
     StoredEntry,
     TuningStore,
     WorkloadKey,
+    budget_covers,
     device_fingerprint,
 )
 from .plan import CacheStats, PlanCache, default_plan_cache
@@ -46,8 +47,12 @@ from .registry import (
     Engine,
     EngineContext,
     backend_table,
+    build_candidate,
+    candidate_lossless,
     eligible_backends,
     get_backend,
+    parse_candidate,
+    preset_candidates,
     register_backend,
     registered_backends,
 )
@@ -72,13 +77,18 @@ __all__ = [
     "WorkloadStats",
     "autotune_engine",
     "backend_table",
+    "budget_covers",
+    "build_candidate",
     "build_engine",
     "byte_terms",
+    "candidate_lossless",
     "default_plan_cache",
     "default_prior",
     "device_fingerprint",
     "eligible_backends",
     "get_backend",
+    "parse_candidate",
+    "preset_candidates",
     "prior_order",
     "ranking_accuracy",
     "register_backend",
@@ -101,13 +111,22 @@ def build_engine(
     max_probes: int | None = None,
     elide: bool | None = None,
     elide_margin: float | None = None,
+    accuracy_budget: float | None = None,
     **options,
 ) -> Engine:
     """Build an MTTKRP engine through the registry.
 
-    method       — a registered backend name, ``"auto"`` (empirical selection
-                   over the eligible lossless backends), or a callable
-                   ``f(factors, mode)`` which is wrapped unchanged.
+    method       — a registered backend name, a preset candidate id
+                   (``"fixed:int7"`` pins that Qm.n preset), ``"auto"``
+                   (empirical selection over the eligible lossless backends
+                   — plus, under `accuracy_budget`, every lossy preset
+                   variant), or a callable ``f(factors, mode)`` which is
+                   wrapped unchanged.
+    accuracy_budget — admit lossy (fixed-point) candidates to the ``"auto"``
+                   tuner, each policed against this max per-mode MTTKRP
+                   relative error (measured on a deterministic nnz sample
+                   during probing); None keeps the lossless-only space.
+                   Only meaningful with ``method="auto"``.
     store        — autotuner persistence: ``True`` for the default store
                    (``~/.cache/repro/autotune.json``, env
                    ``REPRO_AUTOTUNE_CACHE`` overrides), a path, or a
@@ -140,8 +159,23 @@ def build_engine(
         handle, _report = autotune_engine(
             ctx, candidates=candidates, warmup=warmup, reps=reps,
             modes=autotune_modes, store=store, prior=prior,
-            max_probes=max_probes, elide=elide, elide_margin=elide_margin)
+            max_probes=max_probes, elide=elide, elide_margin=elide_margin,
+            accuracy_budget=accuracy_budget)
         return handle
+    if accuracy_budget is not None:
+        raise ValueError(
+            "accuracy_budget only applies to engine='auto' (an explicit "
+            f"backend — here {method!r} — is already a format decision); "
+            "drop the budget or switch to the autotuner")
 
-    spec = get_backend(method)
-    return Engine(spec.name, spec.build(ctx), spec=spec, context=ctx)
+    name, preset = parse_candidate(method)
+    spec = get_backend(name)
+    if preset is not None:
+        explicit = options.get("fixed_preset")
+        if explicit is not None and explicit != preset:
+            raise ValueError(
+                f"conflicting presets: method {method!r} pins "
+                f"{preset!r} but fixed_preset={explicit!r} was also passed; "
+                "drop one of the two spellings")
+        ctx.fixed_preset = preset
+    return Engine(method, spec.build(ctx), spec=spec, context=ctx)

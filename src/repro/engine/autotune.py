@@ -28,25 +28,50 @@ of the per-mode decision boundary.  A cold start's probe count drops from
 measure-once-predict-the-rest structure the paper uses for tensor
 placement.
 
-Lossy backends (fixed point) are excluded by default: number format is an
-accuracy choice (paper Fig. 6), execution strategy is a speed choice
-(paper Fig. 7); the tuner only makes the latter.
+Number format joins the candidate space behind an explicit accuracy budget
+(paper Fig. 6): by default lossy backends are excluded — format is an
+accuracy choice, and the tuner only makes speed choices for free — but
+`accuracy_budget=` (max tolerated per-mode MTTKRP relative error) widens
+the candidate space to (backend × fixed-point preset).  Each lossy
+candidate's probe then measures error against the float COO reference on a
+deterministic nnz sample alongside time; candidates over budget are
+rejected before ranking, and under elision the modes never probed are
+bounded by the quantization model (`qformat.cross_mode_error_bound`) —
+measured on the anchor, modelled on the rest, exactly like the timings.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.cpals import init_factors
+from ..core.mttkrp import mttkrp_coo
+from ..core.qformat import FIXED_PRESETS, cross_mode_error_bound, value_qformat
 from .calibrate import CalibratedPrior, CalibrationError
 from .costmodel import CostModelPrior, default_prior
 from .persist import StoredEntry, TuningStore, WorkloadKey, resolve_store
-from .registry import Engine, EngineContext, eligible_backends, get_backend
+from .registry import (
+    Engine,
+    EngineContext,
+    build_candidate,
+    candidate_lossless,
+    eligible_backends,
+    get_backend,
+    parse_candidate,
+    preset_candidates,
+)
 
 __all__ = ["AutotuneReport", "autotune_engine"]
+
+#: Upper bound on the deterministic nnz sample the error probes draw; the
+#: sampled nonzeros' mode-coordinates select the output rows compared
+#: against the float reference (small tensors are compared in full).
+_ERROR_SAMPLE_NNZ = 2048
 
 
 @dataclasses.dataclass
@@ -68,6 +93,9 @@ class AutotuneReport:
         default_factory=dict)             # anchored predictions (elision path)
     n_elided: int = 0                     # (candidate, mode) probes skipped
     store_path: str | None = None         # persistence store, when used
+    accuracy_budget: float | None = None  # max per-mode MTTKRP rel error
+    errors: dict[str, dict[int, float]] = dataclasses.field(
+        default_factory=dict)             # candidate -> mode -> MEASURED err
 
     @property
     def chosen(self) -> str:
@@ -82,6 +110,8 @@ class AutotuneReport:
         head += f" probes={self.n_probes}"
         if self.n_elided:
             head += f" elided={self.n_elided}"
+        if self.accuracy_budget is not None:
+            head += f" budget={self.accuracy_budget:.3g}"
         if self.prior_name:
             head += f" prior={self.prior_name}"
         if self.store_path:
@@ -94,6 +124,10 @@ class AutotuneReport:
                 t += "  " + " ".join(f"m{m}~{s * 1e3:.2f}ms"
                                      for m, s in sorted(pred.items())
                                      if m not in per_mode)
+            errs = self.errors.get(name, {})
+            if errs:
+                t += "  err " + " ".join(f"m{m}={e:.2e}"
+                                         for m, e in sorted(errs.items()))
             lines.append(f"  {name:12s} {t}")
         for name, why in sorted(self.skipped.items()):
             lines.append(f"  {name:12s} skipped: {why.splitlines()[0]}")
@@ -157,14 +191,16 @@ def _engine_from_entry(
     built: dict[str, object] = {}
     for name in needed:
         try:
-            built[name] = get_backend(name).build(ctx)
+            built[name] = build_candidate(name, ctx)
         except Exception:  # noqa: BLE001 — stale winner → re-measure
             return None
     report = AutotuneReport(
         winners=winners, timings={n: dict(p) for n, p in entry.timings.items()},
         candidates=list(candidates), skipped={},
         warmup=entry.warmup, reps=entry.reps,
-        source="persisted", n_probes=0, store_path=store.path)
+        source="persisted", n_probes=0, store_path=store.path,
+        accuracy_budget=entry.budget,
+        errors={n: dict(p) for n, p in entry.errors.items()})
     fn = _dispatcher(built, winners, entry.overall, ctx.st.ndim)
     return Engine(f"auto:{report.chosen}", fn, context=ctx, report=report), report
 
@@ -218,11 +254,24 @@ def autotune_engine(
     max_probes: int | None = None,
     elide: bool | None = None,
     elide_margin: float | None = None,
+    accuracy_budget: float | None = None,
 ) -> tuple[Engine, AutotuneReport]:
     """Measure candidate backends on `ctx.st` and return a dispatching
     engine that routes each MTTKRP mode to its measured (or, under elision,
     confidently predicted) winner.
 
+    accuracy_budget — max tolerated per-mode MTTKRP relative error, or None
+                   (default) to keep the lossless-only candidate space.
+                   With a budget, the default candidates additionally
+                   include every lossy (backend × preset) variant
+                   ("fixed:int3" / "fixed:int7" / "fixed:int15-12"); each
+                   probe of a lossy candidate also measures its error
+                   against the float COO reference on a deterministic nnz
+                   sample, candidates whose measured (or, for un-probed
+                   modes, quantization-model-bounded) error exceeds the
+                   budget are rejected before ranking, and the budget plus
+                   measured errors ride along into the tuning store so a
+                   warm hit only applies when its budget covers the request.
     store        — persistence (see persist.py): `True` for the default
                    `~/.cache/repro/autotune.json` (env `REPRO_AUTOTUNE_CACHE`
                    overrides), a path, or a `TuningStore`.  A fingerprint hit
@@ -254,6 +303,11 @@ def autotune_engine(
     decomposition down with it — and its probes are not charged to
     `report.n_probes`.
     """
+    if accuracy_budget is not None and not accuracy_budget > 0:
+        raise ValueError(
+            f"accuracy_budget is a max relative error and must be > 0 (got "
+            f"{accuracy_budget}); pass None to keep the lossless-only "
+            "candidate space")
     if candidates is None:
         candidates = [n for n in eligible_backends(lossless_only=True)
                       if n != "auto"]
@@ -263,6 +317,13 @@ def autotune_engine(
         # it competes like everyone else.  Explicit `candidates` overrides.
         if ctx.interpret and "pallas" in candidates:
             candidates.remove("pallas")
+        # An accuracy budget widens the space to (backend × preset): every
+        # lossy variant competes, each policed by its measured error.
+        if accuracy_budget is not None:
+            candidates.extend(preset_candidates())
+    else:
+        for cand in candidates:
+            parse_candidate(cand)  # fail fast on a typo'd backend/preset
     if not candidates:
         raise ValueError("no eligible backends to autotune over")
     if max_probes is not None and max_probes < 1:
@@ -291,7 +352,10 @@ def autotune_engine(
     key = None
     if tuning_store is not None:
         key = WorkloadKey.from_tensor(ctx.st, ctx.rank, candidates)
-        entry = tuning_store.lookup(key)
+        # The budget gates the hit: an entry tuned under a stricter-or-equal
+        # budget serves (its winners' measured errors satisfy this request
+        # too); anything else is invisible and the workload re-probes.
+        entry = tuning_store.lookup(key, budget=accuracy_budget)
         if entry is not None:
             warm = _engine_from_entry(ctx, entry, candidates, modes,
                                       tuning_store)
@@ -326,21 +390,96 @@ def autotune_engine(
     timings: dict[str, dict[int, float]] = {}
     predicted: dict[str, dict[int, float]] = {}
     probe_counts: dict[str, int] = {}
+    errors: dict[str, dict[int, float]] = {}
+
+    # -- accuracy probes (lossy candidates under a budget) -----------------
+    # The float COO reference and the deterministic nnz sample are shared by
+    # every lossy candidate: one reference MTTKRP per probed mode, compared
+    # on the output rows that the sampled nonzeros touch.
+    lossy = {c for c in candidates if not candidate_lossless(c)}
+    value_frac = (value_qformat(ctx.st.values).frac_bits
+                  if accuracy_budget is not None and lossy else 7)
+    _refs: dict[int, jnp.ndarray] = {}
+    _rows: dict[int, np.ndarray] = {}
+    _sample = None
+
+    def _ref_rows(m: int) -> tuple[jnp.ndarray, np.ndarray]:
+        nonlocal _sample
+        if m not in _refs:
+            coords = np.asarray(ctx.st.coords)
+            if _sample is None:
+                rng = np.random.default_rng(seed)
+                n = min(int(ctx.st.nnz), _ERROR_SAMPLE_NNZ)
+                _sample = rng.choice(int(ctx.st.nnz), size=n, replace=False)
+            rows = np.unique(coords[_sample, m])
+            # Output row i of mode m only receives contributions from the
+            # nonzeros with coords[:, m] == i, so the reference is computed
+            # EXACTLY on that subset — the sample bounds the reference cost,
+            # not just the norm comparison.
+            touch = np.isin(coords[:, m], rows)
+            _refs[m] = mttkrp_coo(
+                tuple(factors), jnp.asarray(coords[touch]),
+                jnp.asarray(np.asarray(ctx.st.values)[touch]),
+                mode=m, out_dim=ctx.st.shape[m])
+            _rows[m] = rows
+        return _refs[m], _rows[m]
+
+    def _measure_error(name: str, m: int) -> float:
+        ref, rows = _ref_rows(m)
+        out = built[name](factors, m)
+        diff = jnp.linalg.norm(jnp.asarray(out)[rows] - ref[rows])
+        return float(diff / (jnp.linalg.norm(ref[rows]) + 1e-30))
+
+    def _cand_preset(name: str) -> str | None:
+        """Preset whose quantization model bounds this candidate's un-probed
+        modes; None for a lossy backend outside the Qm.n preset family (a
+        user-registered approximate backend has no model to lean on)."""
+        base, preset = parse_candidate(name)
+        if preset is None and get_backend(base).supports_fixed_point:
+            preset = ctx.fixed_preset
+        return preset if preset in FIXED_PRESETS else None
+
+    def _cross_bound(name: str, m: int) -> float:
+        """Error estimate for an un-probed (candidate, mode): the worst
+        measured mode with the quantization model's headroom/cap, or
+        infinity for a lossy candidate with no model and no measurement."""
+        measured = errors.get(name, {})
+        preset = _cand_preset(name)
+        if preset is not None:
+            return cross_mode_error_bound(measured, preset, ctx.st.ndim,
+                                          value_frac=value_frac)
+        return max(measured.values(), default=float("inf")) * 2.0
 
     def _probe(name: str, m: int) -> bool:
         """Measure (name, mode); False + full disqualification on failure —
         a candidate that raised anywhere contributes no timings, no winners
-        and no charged probes."""
+        and no charged probes.  Under an accuracy budget a lossy candidate's
+        probe also measures its error; over budget disqualifies the same
+        way (the probes already spent are likewise not charged)."""
         try:
             if name not in built:
-                built[name] = get_backend(name).build(ctx)
+                built[name] = build_candidate(name, ctx)
             t = _time_backend(name, built[name], factors, m,
                               warmup=warmup, reps=reps)
+            err = None
+            if accuracy_budget is not None and name in lossy:
+                err = _measure_error(name, m)
         except Exception as e:  # noqa: BLE001 — any failure disqualifies
             skipped[name] = f"{type(e).__name__}: {e}"
-            for book in (built, timings, predicted, probe_counts):
+            for book in (built, timings, predicted, probe_counts, errors):
                 book.pop(name, None)
             return False
+        if err is not None:
+            errors.setdefault(name, {})[m] = err
+            if err > accuracy_budget:
+                skipped[name] = (
+                    f"over accuracy budget: mode {m} rel err {err:.3g} > "
+                    f"{accuracy_budget:.3g}")
+                # Keep `errors` — a real measurement of a rejected candidate
+                # is still worth reporting (and persisting).
+                for book in (built, timings, predicted, probe_counts):
+                    book.pop(name, None)
+                return False
         timings.setdefault(name, {})[m] = t
         probe_counts[name] = probe_counts.get(name, 0) + 1
         return True
@@ -385,6 +524,25 @@ def autotune_engine(
                 for n in need:
                     _probe(n, m)
 
+    if accuracy_budget is not None:
+        # Rejection happens BEFORE ranking: a lossy candidate must sit under
+        # budget on every requested mode — measured where it was probed,
+        # bounded by the quantization model (`cross_mode_error_bound`)
+        # where elision skipped the probe.
+        for name in [n for n in timings if n in lossy]:
+            unmeasured = {m: _cross_bound(name, m) for m in modes
+                          if m not in errors.get(name, {})}
+            bad = {m: e for m, e in unmeasured.items()
+                   if e > accuracy_budget}
+            if bad:
+                m, e = min(bad.items())
+                skipped[name] = (
+                    f"over accuracy budget: mode {m} error bound {e:.3g} > "
+                    f"{accuracy_budget:.3g} (un-probed mode; quantization-"
+                    "model bound)")
+                for book in (built, timings, predicted, probe_counts):
+                    book.pop(name, None)
+
     if not timings:
         raise RuntimeError(
             f"autotune: every candidate failed: {skipped}")
@@ -393,12 +551,13 @@ def autotune_engine(
     winners: dict[int, str] = {}
     for m in modes:
         measured = [n for n in survivors if m in timings[n]]
-        if measured:
-            winners[m] = min(measured, key=lambda n, m=m: (timings[n][m], n))
-        else:  # fully elided mode: the prior's anchored prediction decides
-            winners[m] = min(
-                survivors,
-                key=lambda n, m=m: (predicted[n].get(m, float("inf")), n))
+        # A mode nobody measured was fully elided: the prior's anchored
+        # prediction decides it.
+        winners[m] = (
+            min(measured, key=lambda n, m=m: (timings[n][m], n))
+            if measured
+            else min(survivors,
+                     key=lambda n, m=m: (predicted[n].get(m, float("inf")), n)))
 
     # Untimed modes (when `modes` was restricted) fall back to the overall
     # fastest backend over the requested modes — measured where available,
@@ -419,14 +578,15 @@ def autotune_engine(
         skipped=skipped, warmup=warmup, reps=reps,
         source="measured", n_probes=n_probes, prior_order=order,
         prior_name=prior_name, predicted=predicted, n_elided=n_elided,
-        store_path=tuning_store.path if tuning_store is not None else None)
+        store_path=tuning_store.path if tuning_store is not None else None,
+        accuracy_budget=accuracy_budget, errors=errors)
 
     if tuning_store is not None and key is not None:
-        try:
+        # An unwritable store degrades to per-process tuning.
+        with contextlib.suppress(OSError):
             tuning_store.record(key, winners, timings, overall=overall,
-                                warmup=warmup, reps=reps)
-        except OSError:
-            pass  # an unwritable store degrades to per-process tuning
+                                warmup=warmup, reps=reps,
+                                budget=accuracy_budget, errors=errors)
 
     # Drop losing engines so their device-resident data (reordered copies,
     # densified blocks, ...) doesn't stay alive for the whole CP-ALS run.

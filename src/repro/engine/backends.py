@@ -16,6 +16,8 @@ it exactly once.
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 
@@ -79,6 +81,7 @@ def _build_chunked(ctx: EngineContext):
 
 @register_backend(
     "fixed", needs_chunking=True, supports_fixed_point=True, lossless=False,
+    presets=tuple(FIXED_PRESETS),
     description="PRISM chunked + paper Alg. 2 fixed point (int7 / int15-12)")
 def _build_fixed(ctx: EngineContext):
     ct = ctx.chunked()
@@ -89,6 +92,13 @@ def _build_fixed(ctx: EngineContext):
     qvalues = jnp.asarray(vq.quantize_np(ct.values))
     nnz_pt = jnp.asarray(ct.nnz_per_task) if ctx.lockfree_mode else None
 
+    # One compiled program per mode: unlike the float backends (a single
+    # pre-jitted kernel call), the fixed path wraps its kernel in factor
+    # quantization and output dequantization — left eager, those ~4 ops per
+    # factor of dispatch overhead swamp the narrow-int memory win this
+    # backend exists for.  Fusing quantize → kernel → dequantize also lets
+    # XLA keep the intermediates in int registers.
+    @partial(jax.jit, static_argnums=1)
     def engine(factors, mode):
         qfactors = tuple(qf.quantize(f) for f in factors)
         qvals = qvalues
@@ -142,13 +152,11 @@ def _build_pallas(ctx: EngineContext):
     "distributed", needs_chunking=True, min_devices=2,
     description="shard_map mesh: rank partitioning on `model`, tasks on `data`")
 def _build_distributed(ctx: EngineContext):
-    if ctx.mesh is not None:
-        mesh = ctx.mesh
-    else:
-        # Default to a real model axis when the host allows it, so rank
-        # partitioning (the paper's favored, replication-free partitioning)
-        # is actually exercised — not just the data/task axis.
-        mesh = make_local_mesh(n_model=2 if len(jax.devices()) >= 2 else 1)
+    # Default to a real model axis when the host allows it, so rank
+    # partitioning (the paper's favored, replication-free partitioning)
+    # is actually exercised — not just the data/task axis.
+    mesh = (ctx.mesh if ctx.mesh is not None
+            else make_local_mesh(n_model=2 if len(jax.devices()) >= 2 else 1))
     dmt = DistributedMTTKRP(mesh, ctx.chunked(), ctx.rank, reduce=ctx.reduce)
     shape = ctx.st.shape
 

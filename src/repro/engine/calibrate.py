@@ -11,11 +11,15 @@ memory-bound model: cold-start ranking improves with every workload tuned.
 
 The per-backend byte models are linear in the reparametrized coefficients
 
-    seconds ≈ a0·fixed + a1·padded + a2·densified + dispatch[backend]
+    seconds ≈ a0·fixed + a1·padded + a2·densified + a3·narrow + dispatch[backend]
 
-with ``a0 = 1/bandwidth``, ``a1 = chunk_padding/bandwidth`` and
-``a2 = chunk_padding·hetero_overhead/bandwidth`` (see
-`costmodel.byte_terms`), so the fit is one weighted least squares solve —
+with ``a0 = 1/bandwidth``, ``a1 = chunk_padding/bandwidth``,
+``a2 = chunk_padding·hetero_overhead/bandwidth`` and
+``a3 = 1/narrow_bandwidth`` — the per-width bandwidth term: `narrow` counts
+bytes moved through quantized int paths, already scaled by each candidate's
+preset storage width, so one learned throughput coefficient prices every
+Qm.n width (see `costmodel.byte_terms`).  The fit is one weighted least
+squares solve —
 rows are weighted by ``1/seconds`` to minimize *relative* error, since a
 giant tensor must not drown out the small ones the ranking also serves.
 Recovered coefficients are sanitized (positivity, physical clamps) and any
@@ -54,9 +58,10 @@ __all__ = [
     "ranking_accuracy",
 ]
 
-#: Fewest observations worth fitting: the model has 3 byte coefficients plus
+#: Fewest observations worth fitting: the model has 4 byte coefficients plus
 #: one dispatch term per backend, so one full sweep of a 3-D tensor over 4
-#: candidates (12 rows) is the floor for a non-degenerate solve.
+#: candidates (12 rows) is the floor for a non-degenerate solve (the narrow
+#: column is all-zero without lossy candidates and drops out of the fit).
 MIN_OBSERVATIONS = 12
 
 _BANDWIDTH_RANGE = (1e8, 1e13)   # B/s — below DDR3 single-channel / above HBM3e
@@ -83,10 +88,16 @@ def _n_devices(key) -> int:
 
 
 def _design_terms(backend: str, stats: WorkloadStats, rank: int, mode: int,
-                  n_devices: int) -> tuple[float, float, float]:
-    """The three byte columns of one observation's design row — the same
+                  n_devices: int) -> tuple[float, float, float, float]:
+    """The four byte columns of one observation's design row — the same
     decomposition `CostModelPrior.seconds` predicts with, by construction."""
     return device_byte_terms(backend, stats, rank, mode, n_devices=n_devices)
+
+
+def _base_backend(candidate: str) -> str:
+    """Preset candidate ids ("fixed:int7") share their backend's dispatch
+    column and exclusion rules — the preset only changes byte widths."""
+    return candidate.partition(":")[0]
 
 
 def _clamp(x: float, lo: float, hi: float) -> float:
@@ -200,28 +211,32 @@ class CalibratedPrior(CostModelPrior):
             if cached is not None:
                 return cached
         obs = [o for o in store.observations(device=device)
-               if o.backend != "pallas" and o.seconds > 0.0
+               if _base_backend(o.backend) != "pallas" and o.seconds > 0.0
                and math.isfinite(o.seconds)]
         if len(obs) < min_observations:
             raise CalibrationError(
                 f"{len(obs)} usable observations in {store.path!r} "
                 f"(need >= {min_observations})")
 
-        backends = tuple(sorted({o.backend for o in obs}))
-        col_of = {b: 3 + i for i, b in enumerate(backends)}
-        a = np.zeros((len(obs), 3 + len(backends)))
+        # Dispatch columns are per *backend*, not per candidate id: every
+        # preset variant shares its family's launch path, so their rows
+        # pool into one dispatch coefficient instead of fragmenting.
+        backends = tuple(sorted({_base_backend(o.backend) for o in obs}))
+        col_of = {b: 4 + i for i, b in enumerate(backends)}
+        a = np.zeros((len(obs), 4 + len(backends)))
         t = np.empty(len(obs))
         for i, o in enumerate(obs):
             stats = WorkloadStats.from_key(o.key)
-            a[i, :3] = _design_terms(o.backend, stats, o.key.rank, o.mode,
+            a[i, :4] = _design_terms(o.backend, stats, o.key.rank, o.mode,
                                      _n_devices(o.key))
-            a[i, col_of[o.backend]] = 1.0
+            a[i, col_of[_base_backend(o.backend)]] = 1.0
             t[i] = o.seconds
         # Weight by 1/t: minimize relative residuals, not absolute seconds.
         w = 1.0 / t
         theta = _nnls(a * w[:, None], t * w)
 
-        prior = cls._sanitize(theta, backends)
+        prior = cls._sanitize(theta, backends,
+                              has_narrow=bool(a[:, 3].any()))
         prior.calibration = prior._residual_report(obs, backends)
         # Model-selection guard: a fit on thin, collinear data (a handful of
         # same-scale dispatch-dominated workloads) can explain the *seconds*
@@ -236,6 +251,7 @@ class CalibratedPrior(CostModelPrior):
             d = default_prior
             prior = cls(bandwidth=d.bandwidth, chunk_padding=d.chunk_padding,
                         hetero_overhead=d.hetero_overhead,
+                        narrow_bandwidth=d.narrow_bandwidth,
                         interpret_penalty=d.interpret_penalty,
                         dispatch_s=d.dispatch_s,
                         distributed_dispatch_s=d.distributed_dispatch_s,
@@ -251,13 +267,13 @@ class CalibratedPrior(CostModelPrior):
         return prior
 
     @classmethod
-    def _sanitize(cls, theta: np.ndarray, backends: tuple[str, ...],
-                  ) -> CalibratedPrior:
+    def _sanitize(cls, theta: np.ndarray, backends: tuple[str, ...], *,
+                  has_narrow: bool = False) -> CalibratedPrior:
         """Map the raw least-squares solution back to physical coefficients,
         keeping the analytic default for anything unfittable (non-positive,
         non-finite, or outside its physical clamp)."""
         d = default_prior
-        a0, a1, a2 = (float(x) for x in theta[:3])
+        a0, a1, a2, a3 = (float(x) for x in theta[:4])
         fallbacks: list[str] = []
 
         if math.isfinite(a0) and a0 > 0:
@@ -275,10 +291,20 @@ class CalibratedPrior(CostModelPrior):
         else:
             hetero_overhead = d.hetero_overhead
             fallbacks.append("hetero_overhead")
+        if has_narrow and math.isfinite(a3) and a3 > 0:
+            narrow_bandwidth = _clamp(1.0 / a3, *_BANDWIDTH_RANGE)
+        else:
+            # Without lossy observations the narrow column is all-zero and
+            # never enters the solve: price narrow bytes at the *fitted*
+            # stream bandwidth (the best-informed guess for this host), and
+            # only report a fallback when there was data and the fit failed.
+            narrow_bandwidth = bandwidth
+            if has_narrow:
+                fallbacks.append("narrow_bandwidth")
 
         dispatch: dict[str, float] = {}
         for i, b in enumerate(backends):
-            v = float(theta[3 + i])
+            v = float(theta[4 + i])
             if math.isfinite(v) and v > _DISPATCH_MIN:
                 dispatch[b] = _clamp(v, *_DISPATCH_RANGE)
             else:
@@ -289,6 +315,7 @@ class CalibratedPrior(CostModelPrior):
 
         prior = cls(bandwidth=bandwidth, chunk_padding=chunk_padding,
                     hetero_overhead=hetero_overhead,
+                    narrow_bandwidth=narrow_bandwidth,
                     interpret_penalty=d.interpret_penalty,
                     dispatch_s=d.dispatch_s,
                     distributed_dispatch_s=d.distributed_dispatch_s,
@@ -300,7 +327,7 @@ class CalibratedPrior(CostModelPrior):
                          backends: tuple[str, ...]) -> CalibrationReport:
         rel_errs: list[float] = []
         sq_errs: list[float] = []
-        per_backend: dict[str, list[float]] = {b: [] for b in backends}
+        per_backend: dict[str, list[float]] = {}
         for o in obs:
             stats = WorkloadStats.from_key(o.key)
             pred = self.seconds(o.backend, stats, o.key.rank, o.mode,
@@ -308,11 +335,14 @@ class CalibratedPrior(CostModelPrior):
             rel = abs(pred - o.seconds) / o.seconds
             rel_errs.append(rel)
             sq_errs.append((pred - o.seconds) ** 2)
-            per_backend[o.backend].append(rel)
+            # Keyed by candidate id, so "fixed:int3" and "fixed:int7" report
+            # separately even though they share one dispatch coefficient.
+            per_backend.setdefault(o.backend, []).append(rel)
         fitted = {
             "bandwidth": self.bandwidth,
             "chunk_padding": self.chunk_padding,
             "hetero_overhead": self.hetero_overhead,
+            "narrow_bandwidth": self.narrow_bandwidth,
         }
         fitted.update({f"dispatch[{b}]": v
                        for b, v in sorted(self.dispatch_overheads.items())})

@@ -25,16 +25,25 @@ The per-backend models mirror how each execution strategy touches memory:
                reflects per-element Python dispatch.
   distributed  chunked bytes split across devices plus an output
                all-reduce and a per-call dispatch overhead.
-  fixed        chunked with 16-bit values/factors (half the gather and
-               value bytes).  Lossy — normally excluded upstream.
+  fixed        chunked with quantized values/factors.  Candidate ids carry
+               the Qm.n preset ("fixed:int3" / "fixed:int7" /
+               "fixed:int15-12"), and the gather/value traffic scales with
+               that preset's storage width — the whole point of the paper's
+               narrow-int path is fewer bytes against the memory roofline.
+               Lossy — only admitted under an accuracy budget.
 
-Every model is decomposed into three byte components (`byte_terms`):
+Every model is decomposed into four byte components (`byte_terms`):
 
     seconds = (fixed + chunk_padding·padded + chunk_padding·hetero_overhead·densified)
-              / bandwidth  +  dispatch(backend)
+              / bandwidth  +  narrow / narrow_bandwidth  +  dispatch(backend)
 
-which is *linear* in the reparametrized coefficients (1/bandwidth,
-chunk_padding/bandwidth, chunk_padding·hetero_overhead/bandwidth, and the
+where `narrow` counts the bytes moved through quantized (int8/int16/int32)
+paths — already scaled by the preset's storage width — and
+`narrow_bandwidth` is the effective throughput of that traffic (quantize /
+dequantize arithmetic rides on every narrow byte, so it need not equal the
+float-stream bandwidth).  The model stays *linear* in the reparametrized
+coefficients (1/bandwidth, chunk_padding/bandwidth,
+chunk_padding·hetero_overhead/bandwidth, 1/narrow_bandwidth, and the
 per-backend dispatch terms) — exactly what `calibrate.py` needs to fit them
 by least squares against the tuning store's measured timings.
 """
@@ -42,6 +51,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+
+from ..core.qformat import FIXED_PRESETS
 
 __all__ = [
     "CostModelPrior",
@@ -54,6 +65,26 @@ __all__ = [
 
 _IDX = 4   # int32 coordinate bytes
 _VAL = 4   # float32 value bytes
+_QVAL = 2  # runtime 16-bit quantized tensor-value bytes (value_qformat)
+
+
+def _split_candidate(name: str) -> tuple[str, str | None]:
+    """Candidate ids are "backend" or "backend:preset"; the byte models (and
+    dispatch lookups) key on the backend, widths on the preset.  Kept local —
+    unknown names must degrade to the COO-like default, not raise, so the
+    registry's strict parser is not used here."""
+    base, _, preset = name.partition(":")
+    return base, (preset or None)
+
+
+def _preset_width(preset: str | None) -> float:
+    """Factor storage bytes per element for a fixed-point preset (falls back
+    to int16/Q9.7 — the paper's preferred mode-3 format — when the candidate
+    doesn't pin one)."""
+    if preset is not None and preset in FIXED_PRESETS:
+        qf, _shift = FIXED_PRESETS[preset]
+        return qf.storage_bits / 8.0
+    return 2.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,56 +106,69 @@ class WorkloadStats:
         return cls(shape=tuple(key.shape), nnz=int(key.nnz))
 
 
-def byte_terms(name: str, st, rank: int, mode: int) -> tuple[float, float, float]:
-    """Decompose backend `name`'s mode-`mode` MTTKRP traffic on `st` into
-    ``(fixed, padded, densified)`` byte components:
+def byte_terms(name: str, st, rank: int, mode: int,
+               ) -> tuple[float, float, float, float]:
+    """Decompose candidate `name`'s mode-`mode` MTTKRP traffic on `st` into
+    ``(fixed, padded, densified, narrow)`` byte components:
 
     - *fixed* bytes move regardless of chunking (coordinates, values,
       gathers, the output);
     - *padded* bytes are scaled by the chunk-capacity padding factor
       (`CostModelPrior.chunk_padding`);
     - *densified* bytes are additionally scaled by the dense-block traffic
-      multiplier (`CostModelPrior.hetero_overhead`).
+      multiplier (`CostModelPrior.hetero_overhead`);
+    - *narrow* bytes move through quantized integer paths, already scaled by
+      the candidate's preset storage width, and are charged at
+      `CostModelPrior.narrow_bandwidth` — this is what lets the prior rank
+      an int8 candidate above an int16 one on a cold start.
 
-    `st` is anything with `.shape`, `.nnz`, `.ndim` (a `SparseTensor` or a
-    `WorkloadStats`).
+    `name` accepts preset candidate ids ("fixed:int3"); `st` is anything
+    with `.shape`, `.nnz`, `.ndim` (a `SparseTensor` or a `WorkloadStats`).
     """
+    base_name, preset = _split_candidate(name)
     n, d, r = st.nnz, st.ndim, rank
     out = st.shape[mode] * r * _VAL
     coords = n * d * _IDX
     values = n * _VAL
     gathers = n * (d - 1) * r * _VAL
     base = coords + values + gathers
-    if name == "ref":
-        return base + 2 * n * r * _VAL + out, 0.0, 0.0
-    if name == "alto":
-        return coords + values + 0.75 * gathers + n * r * _VAL + out, 0.0, 0.0
-    if name in ("chunked", "pallas", "distributed"):
-        return out, base + n * r * _VAL, 0.0
-    if name == "hetero":
-        return out, 0.0, base + n * r * _VAL
-    if name == "fixed":
-        return coords + 0.5 * (values + gathers) + n * r * _VAL + out, 0.0, 0.0
+    if base_name == "ref":
+        return base + 2 * n * r * _VAL + out, 0.0, 0.0, 0.0
+    if base_name == "alto":
+        return (coords + values + 0.75 * gathers + n * r * _VAL + out,
+                0.0, 0.0, 0.0)
+    if base_name in ("chunked", "pallas", "distributed"):
+        return out, base + n * r * _VAL, 0.0, 0.0
+    if base_name == "hetero":
+        return out, 0.0, base + n * r * _VAL, 0.0
+    if base_name == "fixed":
+        # Quantized traffic scales with the preset width: w-byte factor
+        # gathers and accumulator, 16-bit tensor values.  Coordinates and
+        # the dequantized f32 output stay full-width.
+        w = _preset_width(preset)
+        narrow = (w / _VAL) * gathers + n * _QVAL + (w / _VAL) * n * r * _VAL
+        return coords + out, 0.0, 0.0, narrow
     # Unknown (user-registered) backend: assume COO-like traffic so it
     # ranks mid-field and still gets probed under a generous budget.
-    return base + 2 * n * r * _VAL + out, 0.0, 0.0
+    return base + 2 * n * r * _VAL + out, 0.0, 0.0, 0.0
 
 
 def device_byte_terms(name: str, st, rank: int, mode: int, *,
-                      n_devices: int = 1) -> tuple[float, float, float]:
+                      n_devices: int = 1) -> tuple[float, float, float, float]:
     """`byte_terms` adjusted for the device count: the distributed backend
     splits its traffic across the real device count and adds an output
     all-reduce (to the fixed component — it is not sharded).  This is the
     single source of the per-observation decomposition: `CostModelPrior
     .seconds` consumes it for prediction and `calibrate._design_terms` for
     the training design matrix, so the two cannot drift apart."""
-    fixed, padded, densified = byte_terms(name, st, rank, mode)
-    if name == "distributed":
+    fixed, padded, densified, narrow = byte_terms(name, st, rank, mode)
+    if _split_candidate(name)[0] == "distributed":
         nd = max(1, n_devices)
         fixed = fixed / nd + 2 * st.shape[mode] * rank * _VAL
         padded /= nd
         densified /= nd
-    return fixed, padded, densified
+        narrow /= nd
+    return fixed, padded, densified, narrow
 
 
 @dataclasses.dataclass
@@ -141,6 +185,10 @@ class CostModelPrior:
     bandwidth: float = 2.0e10        # sustained memory bandwidth guess, B/s
     chunk_padding: float = 1.25      # padded-task overhead guess for chunked
     hetero_overhead: float = 1.2     # densified-block traffic multiplier
+    #: Effective throughput of quantized-int traffic (B/s).  Bytes are bytes
+    #: on the bus, but every narrow byte also pays quantize/dequantize
+    #: arithmetic, so calibration may learn a value below `bandwidth`.
+    narrow_bandwidth: float = 2.0e10
     interpret_penalty: float = 200.0 # pallas interpret-mode slowdown factor
     dispatch_s: float = 1e-4         # per-call jit dispatch overhead
     distributed_dispatch_s: float = 2e-3  # shard_map per-call overhead
@@ -149,32 +197,37 @@ class CostModelPrior:
     dispatch_overheads: dict[str, float] = dataclasses.field(default_factory=dict)
 
     def dispatch(self, name: str) -> float:
-        """Per-call dispatch overhead for backend `name`, in seconds."""
-        if name in self.dispatch_overheads:
-            return self.dispatch_overheads[name]
-        if name == "distributed":
+        """Per-call dispatch overhead for candidate `name`, in seconds.
+        Preset variants share their backend's dispatch term ("fixed:int3"
+        and "fixed:int7" run the same kernel launch path)."""
+        base, _preset = _split_candidate(name)
+        if base in self.dispatch_overheads:
+            return self.dispatch_overheads[base]
+        if base == "distributed":
             return self.distributed_dispatch_s
         return self.dispatch_s
 
     def bytes_moved(self, name: str, st, rank: int, mode: int) -> float:
         """Estimated bytes moved by one mode-`mode` MTTKRP for `name`
         (single-device traffic; `seconds` applies the device split)."""
-        fixed, padded, densified = byte_terms(name, st, rank, mode)
+        fixed, padded, densified, narrow = byte_terms(name, st, rank, mode)
         return (fixed + self.chunk_padding * padded
-                + self.chunk_padding * self.hetero_overhead * densified)
+                + self.chunk_padding * self.hetero_overhead * densified
+                + narrow)
 
     def seconds(self, name: str, st, rank: int, mode: int, *,
                 interpret: bool = True, n_devices: int = 1) -> float:
         # device_byte_terms splits distributed traffic across the real
         # device count (a single-device host gets no speedup — the mesh
         # degenerates to one shard) and adds the output all-reduce.
-        fixed, padded, densified = device_byte_terms(
+        fixed, padded, densified, narrow = device_byte_terms(
             name, st, rank, mode, n_devices=n_devices)
         t = (fixed + self.chunk_padding * padded
              + self.chunk_padding * self.hetero_overhead * densified
              ) / self.bandwidth
+        t += narrow / self.narrow_bandwidth
         t += self.dispatch(name)
-        if name == "pallas" and interpret:
+        if _split_candidate(name)[0] == "pallas" and interpret:
             t *= self.interpret_penalty
         return t
 

@@ -31,6 +31,7 @@ the cost-model calibration (calibrate.py) fits against.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -41,22 +42,25 @@ from typing import NamedTuple
 import jax
 
 __all__ = [
-    "TuningStore",
-    "WorkloadKey",
-    "StoredEntry",
-    "Observation",
-    "device_fingerprint",
     "DEFAULT_STORE_ENV",
     "DEFAULT_TTL_ENV",
+    "Observation",
+    "StoredEntry",
+    "TuningStore",
+    "WorkloadKey",
+    "budget_covers",
+    "device_fingerprint",
 ]
 
 DEFAULT_STORE_ENV = "REPRO_AUTOTUNE_CACHE"
 DEFAULT_TTL_ENV = "REPRO_AUTOTUNE_TTL"
 # v2 adds nothing to the entry layout (per-entry `created` timestamps were
 # already written by v1) but marks stores whose entries are TTL-aware and
-# near-match-deduplicated; v1 files load unchanged.
-_SCHEMA_VERSION = 2
-_READABLE_VERSIONS = (1, 2)
+# near-match-deduplicated; v1 files load unchanged.  v3 adds the optional
+# `budget` / `errors` fields (accuracy-budgeted format autotuning); v1/v2
+# files load unchanged with budget=None and no recorded errors.
+_SCHEMA_VERSION = 3
+_READABLE_VERSIONS = (1, 2, 3)
 
 
 def default_store_path() -> str:
@@ -159,15 +163,25 @@ class WorkloadKey:
 
 @dataclasses.dataclass
 class StoredEntry:
-    """One persisted autotune outcome."""
+    """One persisted autotune outcome.
+
+    `budget` is the accuracy budget the entry was tuned under (None: the
+    lossless-only default), and `errors` the measured per-mode MTTKRP
+    relative errors of the lossy candidates that were probed — together they
+    let a later lookup decide whether the persisted winners are *valid* for
+    its own budget (see `budget_covers`) instead of trusting blindly.
+    """
 
     key: WorkloadKey
-    winners: dict[int, str]                # mode -> backend name
-    timings: dict[str, dict[int, float]]   # backend -> mode -> best seconds
+    winners: dict[int, str]                # mode -> candidate id
+    timings: dict[str, dict[int, float]]   # candidate -> mode -> best seconds
     overall: str | None = None             # fallback for untimed modes
     warmup: int = 1
     reps: int = 2
     created: float = 0.0
+    budget: float | None = None            # accuracy budget tuned under
+    errors: dict[str, dict[int, float]] = dataclasses.field(
+        default_factory=dict)              # candidate -> mode -> rel error
 
     def to_json(self) -> dict:
         return {
@@ -179,10 +193,14 @@ class StoredEntry:
             "warmup": self.warmup,
             "reps": self.reps,
             "created": self.created,
+            "budget": self.budget,
+            "errors": {n: {str(m): e for m, e in per.items()}
+                       for n, per in self.errors.items()},
         }
 
     @classmethod
     def from_json(cls, d: dict) -> StoredEntry:
+        budget = d.get("budget")
         return cls(
             key=WorkloadKey.from_json(d["key"]),
             winners={int(m): str(n) for m, n in d["winners"].items()},
@@ -192,7 +210,32 @@ class StoredEntry:
             warmup=int(d.get("warmup", 1)),
             reps=int(d.get("reps", 2)),
             created=float(d.get("created", 0.0)),
+            budget=float(budget) if budget is not None else None,
+            errors={n: {int(m): float(e) for m, e in per.items()}
+                    for n, per in d.get("errors", {}).items()},
         )
+
+
+#: Sentinel: "don't filter on budget" (distinct from None, which is the
+#: real lossless-only budget value).
+_ANY_BUDGET = object()
+
+
+def budget_covers(stored: float | None, requested: float | None) -> bool:
+    """Whether winners tuned under `stored` remain valid for `requested`.
+
+    Matching or looser requests reuse the entry: every admitted candidate's
+    measured error was <= the stored budget, so it is also <= any looser
+    one.  Everything else re-probes — a *stricter* request could be handed
+    an over-budget winner, a `None` (lossless-only) request must never
+    dispatch to a lossy winner tuned under some budget, and a budgeted
+    request can't trust an entry that never measured errors at all.
+    """
+    if stored is None:
+        return requested is None
+    if requested is None:
+        return False
+    return requested >= stored
 
 
 def _drop_shadowed(entries: list[StoredEntry]) -> list[StoredEntry]:
@@ -238,10 +281,8 @@ class TuningStore:
     def __init__(self, path: str | os.PathLike | None = None, *,
                  ttl_s: float | None = None):
         self.path = os.fspath(path) if path is not None else default_store_path()
-        if ttl_s is not None:
-            self.ttl_s = ttl_s if ttl_s > 0 else None
-        else:
-            self.ttl_s = default_ttl_s()
+        self.ttl_s = ((ttl_s if ttl_s > 0 else None)
+                      if ttl_s is not None else default_ttl_s())
         self._entries: list[StoredEntry] | None = None  # lazy-loaded
 
     def expired(self, entry: StoredEntry, *, now: float | None = None) -> bool:
@@ -291,10 +332,8 @@ class TuningStore:
                 json.dump(payload, f, indent=1)
             os.replace(tmp, self.path)  # atomic: concurrent readers see old/new
         except BaseException:
-            try:
+            with contextlib.suppress(OSError):
                 os.unlink(tmp)
-            except OSError:
-                pass
             raise
 
     # -- queries -----------------------------------------------------------
@@ -304,14 +343,23 @@ class TuningStore:
     def entries(self) -> list[StoredEntry]:
         return list(self._load())
 
-    def lookup(self, key: WorkloadKey, *, nnz_tol: float = 0.1) -> StoredEntry | None:
+    def lookup(self, key: WorkloadKey, *, nnz_tol: float = 0.1,
+               budget: float | None | object = _ANY_BUDGET,
+               ) -> StoredEntry | None:
         """Exact-or-near fingerprint match (see `WorkloadKey.matches`),
-        ignoring entries past the store's TTL — stale winners re-probe."""
+        ignoring entries past the store's TTL — stale winners re-probe.
+
+        `budget` (when given) additionally requires the entry's tuning
+        budget to cover the requested one (`budget_covers`): an entry tuned
+        under a stricter-or-equal budget serves a looser request, anything
+        else is invisible and the workload re-probes."""
         now = time.time()
         best: StoredEntry | None = None
         best_dist = float("inf")
         for e in self._load():
             if self.expired(e, now=now):
+                continue
+            if budget is not _ANY_BUDGET and not budget_covers(e.budget, budget):
                 continue
             if e.key == key:
                 return e
@@ -345,6 +393,8 @@ class TuningStore:
     def record(self, key: WorkloadKey, winners: dict[int, str],
                timings: dict[str, dict[int, float]], *,
                overall: str | None = None, warmup: int = 1, reps: int = 2,
+               budget: float | None = None,
+               errors: dict[str, dict[int, float]] | None = None,
                save: bool = True) -> StoredEntry:
         """Insert the entry for `key`, replacing the exact fingerprint AND
         any near-match it supersedes: without the latter, repeated
@@ -354,7 +404,9 @@ class TuningStore:
         entry = StoredEntry(key=key, winners=dict(winners),
                             timings={n: dict(p) for n, p in timings.items()},
                             overall=overall, warmup=warmup, reps=reps,
-                            created=time.time())
+                            created=time.time(), budget=budget,
+                            errors={n: dict(p)
+                                    for n, p in (errors or {}).items()})
         entries = self._load()
         self._entries = [e for e in entries
                          if e.key != key and not key.matches(e.key)] + [entry]
@@ -365,10 +417,8 @@ class TuningStore:
     def clear(self) -> None:
         """Drop all entries and delete the backing file."""
         self._entries = []
-        try:
+        with contextlib.suppress(FileNotFoundError):
             os.unlink(self.path)
-        except FileNotFoundError:
-            pass
 
     def __repr__(self) -> str:
         return f"TuningStore({self.path!r}, entries={len(self)})"

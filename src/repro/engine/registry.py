@@ -24,13 +24,17 @@ from .plan import PlanCache, default_plan_cache
 
 __all__ = [
     "BackendSpec",
-    "EngineContext",
     "Engine",
-    "register_backend",
-    "get_backend",
-    "registered_backends",
-    "eligible_backends",
+    "EngineContext",
     "backend_table",
+    "build_candidate",
+    "candidate_lossless",
+    "eligible_backends",
+    "get_backend",
+    "parse_candidate",
+    "preset_candidates",
+    "register_backend",
+    "registered_backends",
 ]
 
 
@@ -43,9 +47,14 @@ class BackendSpec:
     supports_fixed_point — runs the paper's Alg.-2 Qm.n arithmetic.
     lossless             — bit-compatible with the float COO reference (up
                            to reduction order); lossy backends (fixed point)
-                           are excluded from autotuning by default since
-                           format choice is an accuracy decision, not a
-                           speed decision.
+                           are excluded from autotuning unless the caller
+                           grants an explicit `accuracy_budget` — format
+                           choice is an accuracy decision, and the tuner
+                           only makes it against a declared error budget.
+    presets              — the Qm.n fixed-point presets this backend can run
+                           (`FIXED_PRESETS` names).  Each preset becomes its
+                           own autotune candidate `"name:preset"` when an
+                           accuracy budget admits lossy candidates.
     min_devices          — minimum jax device count to be eligible.
     """
 
@@ -54,6 +63,7 @@ class BackendSpec:
     needs_chunking: bool = False
     supports_fixed_point: bool = False
     lossless: bool = True
+    presets: tuple[str, ...] = ()
     min_devices: int = 1
     description: str = ""
 
@@ -67,11 +77,16 @@ def register_backend(
     needs_chunking: bool = False,
     supports_fixed_point: bool = False,
     lossless: bool = True,
+    presets: tuple[str, ...] = (),
     min_devices: int = 1,
     description: str = "",
 ):
     """Decorator registering a builder under `name` (last wins, so tests
     and downstream code can override a backend)."""
+    if ":" in name:
+        raise ValueError(
+            f"backend name {name!r} may not contain ':' — that separator is "
+            "reserved for preset candidate ids (e.g. 'fixed:int7')")
     def deco(build: Callable) -> Callable:
         _REGISTRY[name] = BackendSpec(
             name=name,
@@ -79,6 +94,7 @@ def register_backend(
             needs_chunking=needs_chunking,
             supports_fixed_point=supports_fixed_point,
             lossless=lossless,
+            presets=tuple(presets),
             min_devices=min_devices,
             description=description,
         )
@@ -99,6 +115,65 @@ def registered_backends() -> dict[str, BackendSpec]:
     return dict(_REGISTRY)
 
 
+# ---------------------------------------------------------------------------
+# Candidate ids: "backend" or "backend:preset"
+#
+# The autotuner's candidate space is (backend × fixed-point preset): a lossy
+# backend contributes one candidate per Qm.n preset it declares, spelled
+# "name:preset" ("fixed:int7").  These helpers are the single parser/builder
+# for that spelling — the tuning store, cost model and autotuner all agree on
+# it because they all come through here.
+# ---------------------------------------------------------------------------
+
+def parse_candidate(candidate: str) -> tuple[str, str | None]:
+    """Split a candidate id into (backend name, preset or None), validating
+    both halves against the registry."""
+    name, _, preset = candidate.partition(":")
+    spec = get_backend(name)
+    if not preset:
+        return name, None
+    if preset not in spec.presets:
+        raise ValueError(
+            f"backend {name!r} has no preset {preset!r}; "
+            f"registered presets: {list(spec.presets) or 'none'}")
+    return name, preset
+
+
+def candidate_lossless(candidate: str) -> bool:
+    """Whether a candidate id names a lossless backend.  Unknown candidates
+    count as lossy — nothing is known about their output, so accuracy-
+    sensitive callers (the cp_als fit fast path) must not trust them."""
+    try:
+        name, _preset = parse_candidate(candidate)
+    except ValueError:
+        return False
+    return _REGISTRY[name].lossless
+
+
+def build_candidate(candidate: str, ctx: EngineContext):
+    """Build a candidate id against `ctx`, overriding `ctx.fixed_preset`
+    when the id pins one.  The preset-pinned context shares the plan cache
+    (and therefore the chunking) with the original."""
+    name, preset = parse_candidate(candidate)
+    spec = _REGISTRY[name]
+    if preset is not None and preset != ctx.fixed_preset:
+        ctx = dataclasses.replace(ctx, fixed_preset=preset)
+    return spec.build(ctx)
+
+
+def preset_candidates(*, n_devices: int | None = None) -> list[str]:
+    """Every lossy (backend, preset) candidate id this process could build:
+    what an accuracy budget adds to the default candidate set."""
+    if n_devices is None:
+        n_devices = len(jax.devices())
+    return [
+        f"{s.name}:{p}"
+        for s in _REGISTRY.values()
+        if not s.lossless and n_devices >= s.min_devices
+        for p in s.presets
+    ]
+
+
 def eligible_backends(
     *,
     n_devices: int | None = None,
@@ -117,14 +192,16 @@ def eligible_backends(
 def backend_table() -> str:
     """Markdown capability table (used by the README and `--help` text)."""
     rows = [
-        "| backend | chunked | fixed-point | lossless | min devices | description |",
-        "|---------|---------|-------------|----------|-------------|-------------|",
+        "| backend | chunked | fixed-point | lossless | presets | min devices | description |",
+        "|---------|---------|-------------|----------|---------|-------------|-------------|",
     ]
     for s in _REGISTRY.values():
+        presets = " ".join(f"`{p}`" for p in s.presets) if s.presets else "—"
         rows.append(
             f"| `{s.name}` | {'✓' if s.needs_chunking else '—'} "
             f"| {'✓' if s.supports_fixed_point else '—'} "
             f"| {'✓' if s.lossless else '—'} "
+            f"| {presets} "
             f"| {s.min_devices} | {s.description} |"
         )
     return "\n".join(rows)

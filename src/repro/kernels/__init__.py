@@ -3,4 +3,4 @@
 `mttkrp_kernel` / `mttkrp_fixed_kernel` hold the pallas_call bodies,
 `ops` the jit'd public wrappers, `ref` the pure-jnp oracles.
 """
-from .ops import mttkrp_pallas, mttkrp_fixed_pallas
+from .ops import mttkrp_fixed_pallas, mttkrp_pallas

@@ -11,8 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
-from .mttkrp_kernel import mttkrp_pallas_local
 from .mttkrp_fixed_kernel import mttkrp_fixed_pallas_local
+from .mttkrp_kernel import mttkrp_pallas_local
 
 __all__ = ["mttkrp_pallas", "mttkrp_fixed_pallas", "pad_factor"]
 

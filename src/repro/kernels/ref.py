@@ -51,10 +51,8 @@ def mttkrp_fixed_local_ref(qfactors, task_chunk, coords_rel, qvalues, *,
         idx = offsets[:, m][:, None] + coords_rel[:, :, m]
         idx = jnp.minimum(idx, qfactors[m].shape[0] - 1)
         rows = qfactors[m][idx].astype(jnp.int32)
-        if part is None:
-            part = rows
-        else:
-            part = jax.lax.shift_right_arithmetic(part * rows, matrix_frac)
+        part = (rows if part is None
+                else jax.lax.shift_right_arithmetic(part * rows, matrix_frac))
     part = part * qvalues[..., None].astype(jnp.int32)
     part = jax.lax.shift_right_arithmetic(part, value_frac + prec_shift)
     s_out = chunk_shape[mode]

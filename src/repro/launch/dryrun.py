@@ -26,7 +26,7 @@ from ..models import LM
 from ..optim import AdamWConfig
 from ..roofline import collective_bytes, roofline_terms
 from ..roofline.model import model_flops
-from .mesh import make_production_mesh, dp_axes
+from .mesh import dp_axes, make_production_mesh
 from .shardings import (batch_shardings, cache_shardings, init_shapes,
                         opt_shardings, param_shardings)
 from .steps import (init_opt_shapes, make_ctx, make_decode_step,

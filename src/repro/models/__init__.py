@@ -1,4 +1,4 @@
 """LM substrate: functional nn lib, attention/MoE/SSM/xLSTM mixers,
 pattern-scanned stacks, and the composable LM wrapper."""
-from .model import LM, ModelConfig, LayerSpec
+from .model import LM, LayerSpec, ModelConfig
 from .transformer import MeshCtx

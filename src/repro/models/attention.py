@@ -196,11 +196,10 @@ def attention(p, cfg: AttnConfig, x, *, positions=None, kv_x=None,
         q = constrain(q, ("dp", None, None, None))
         k = constrain(k, ("dp", None, None, None))
         v = constrain(v, ("dp", None, None, None))
-    if cfg.chunk is not None:
-        out = _chunked_attn(cfg, q, k, v, positions, kv_positions)
-    else:
-        out = _flash(cfg, q, k, v, positions, kv_positions,
-                     constrain=constrain)
+    out = (_chunked_attn(cfg, q, k, v, positions, kv_positions)
+           if cfg.chunk is not None
+           else _flash(cfg, q, k, v, positions, kv_positions,
+                       constrain=constrain))
     if constrain is not None:
         out = constrain(out, ("dp", None, None, None))
     return nn.linear(p["wo"], out.reshape(b, s, -1)), (k, v)

@@ -80,10 +80,8 @@ def _moe_body(cfg: MoEConfig, e_loc: int, model_axis, data_axes, seq_sharded,
               x, router, wg, wu, wd):
     """shard_map body. x: (B_loc, S_loc, D). Expert weights: (E_loc, D, F_loc)
     / (E_loc, F_loc, D). Returns (B_loc, S_loc, D)."""
-    if seq_sharded:
-        x_full = jax.lax.all_gather(x, model_axis, axis=1, tiled=True)
-    else:
-        x_full = x
+    x_full = (jax.lax.all_gather(x, model_axis, axis=1, tiled=True)
+              if seq_sharded else x)
     b, s, d = x_full.shape
     t = b * s
     xt = x_full.reshape(t, d)

@@ -82,10 +82,8 @@ def _ssm_inputs(p, cfg: MambaConfig, u):
 def _conv(p, cfg: MambaConfig, x, conv_state=None):
     """Causal depthwise conv over time. x (B,S,di)."""
     k = cfg.d_conv
-    if conv_state is None:
-        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
-    else:
-        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    xp = (jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0))) if conv_state is None
+          else jnp.concatenate([conv_state.astype(x.dtype), x], axis=1))
     w = p["conv_w"].astype(x.dtype)  # (K, di)
     out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
     return out + p["conv_b"].astype(x.dtype), xp[:, -(k - 1):]

@@ -24,8 +24,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..launch.mesh import shard_map
 from . import attention as attn_mod
 from . import moe as moe_mod
-from . import nn
-from . import ssm, xlstm
+from . import nn, ssm, xlstm
 
 __all__ = ["LayerSpec", "MeshCtx", "block_init", "block_apply", "block_decode",
            "stack_init", "stack_apply", "stack_decode", "init_stack_cache"]
@@ -325,12 +324,10 @@ def block_decode(p, cfg, spec: LayerSpec, ctx: MeshCtx, x, cache, pos):
         x = x + out
     if spec.mlp != "none":
         h = nn.rmsnorm(p["ln2"], x, cfg.norm_eps)
-        if spec.mlp == "moe":
-            out = moe_mod.moe_apply(
-                p["moe"], cfg.moe_cfg(), h, mesh=ctx.mesh, dp_axes=ctx.dp,
-                model_axis=ctx.tp, seq_sharded=False)
-        else:
-            out = _mlp_apply(p["mlp"], cfg, ctx, h)
+        out = (moe_mod.moe_apply(
+                   p["moe"], cfg.moe_cfg(), h, mesh=ctx.mesh, dp_axes=ctx.dp,
+                   model_axis=ctx.tp, seq_sharded=False)
+               if spec.mlp == "moe" else _mlp_apply(p["mlp"], cfg, ctx, h))
         x = x + out
     return x, new
 

@@ -1,2 +1,2 @@
 from .hlo import collective_bytes, parse_collectives
-from .model import roofline_terms, V5E
+from .model import V5E, roofline_terms

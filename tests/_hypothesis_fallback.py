@@ -13,7 +13,6 @@ replays of the property tests, not a shrinking fuzzer.
 """
 from __future__ import annotations
 
-
 import numpy as np
 
 DEFAULT_EXAMPLES = 10

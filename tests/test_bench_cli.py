@@ -1,0 +1,31 @@
+"""benchmarks.run CLI contract: an unknown --only suite name must abort
+with a non-zero exit listing the valid names — never silently run the
+recognizable subset and exit 0."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(only: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--fast", "--only", only],
+        capture_output=True, text=True, cwd=ROOT, env=env, timeout=600)
+
+
+def test_unknown_suite_name_aborts_nonzero():
+    out = _run("fig6,fig8")   # "fig8" is a typo for "fig8_9"
+    assert out.returncode == 2, (out.returncode, out.stderr[-2000:])
+    assert "fig8" in out.stderr
+    assert "fig8_9" in out.stderr          # the valid names are listed
+    assert "benchmarks.fig6" not in out.stdout   # nothing ran
+
+
+def test_empty_token_aborts_nonzero():
+    out = _run("fig6,")       # stray trailing comma
+    assert out.returncode == 2, (out.returncode, out.stderr[-2000:])
+    assert "valid names" in out.stderr

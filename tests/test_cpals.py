@@ -8,7 +8,7 @@ try:
 except ImportError:  # offline container — deterministic replay shim
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.core import (Q5_3, Q9_7, Q17_15, cp_als, fit_value, random_tensor,
+from repro.core import (Q17_15, Q5_3, Q9_7, cp_als, fit_value, random_tensor,
                         value_qformat)
 from repro.core.qformat import QFormat
 

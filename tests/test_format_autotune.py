@@ -1,0 +1,364 @@
+"""Accuracy-budgeted format autotuning: the candidate space widens to
+(backend × fixed-point preset) behind `accuracy_budget=`, every lossy
+candidate is policed by its measured MTTKRP error, over-budget candidates
+are rejected before ranking, and the budget + errors persist with the
+tuning store so warm hits only apply when the budget still covers them."""
+import numpy as np
+import pytest
+
+from repro.core import cp_als, fit_value, random_tensor
+from repro.core.qformat import CROSS_MODE_SLACK, FIXED_PRESETS
+from repro.engine import (
+    CostModelPrior,
+    PlanCache,
+    TuningStore,
+    WorkloadKey,
+    backend_table,
+    budget_covers,
+    build_engine,
+    byte_terms,
+    candidate_lossless,
+    parse_candidate,
+    preset_candidates,
+)
+from repro.engine import autotune as _autotune
+
+KW = dict(chunk_shape=(8, 8, 8), capacity=64)
+FMT_CANDS = ["chunked", "fixed:int3", "fixed:int7", "fixed:int15-12"]
+
+
+def _probe_counter(monkeypatch):
+    calls = []
+    real = _autotune._time_call
+
+    def counting(*a, **k):
+        calls.append(1)
+        return real(*a, **k)
+
+    monkeypatch.setattr(_autotune, "_time_call", counting)
+    return calls
+
+
+def _rig_clock(monkeypatch, seconds_of):
+    """Deterministic probe clock: `seconds_of(candidate, mode) -> seconds`."""
+    def fake(name, engine, factors, mode, *, warmup, reps):
+        return seconds_of(name, mode)
+    monkeypatch.setattr(_autotune, "_time_backend", fake)
+
+
+# ---------------------------------------------------------------------------
+# Candidate ids
+# ---------------------------------------------------------------------------
+
+def test_parse_candidate_and_preset_enumeration():
+    assert parse_candidate("chunked") == ("chunked", None)
+    assert parse_candidate("fixed") == ("fixed", None)
+    assert parse_candidate("fixed:int7") == ("fixed", "int7")
+    with pytest.raises(ValueError, match="no preset 'int9'"):
+        parse_candidate("fixed:int9")
+    with pytest.raises(ValueError, match="no preset"):
+        parse_candidate("chunked:int7")  # lossless backends have no presets
+    with pytest.raises(ValueError, match="unknown engine"):
+        parse_candidate("bogus:int7")
+    assert set(preset_candidates()) == {
+        f"fixed:{p}" for p in FIXED_PRESETS}
+    assert candidate_lossless("chunked")
+    assert not candidate_lossless("fixed")
+    assert not candidate_lossless("fixed:int7")
+    assert not candidate_lossless("never_registered")
+
+
+def test_explicit_preset_candidate_builds_that_preset():
+    st = random_tensor((20, 16, 24), 400, seed=1)
+    rank = 4
+    pinned = build_engine(st, "fixed:int15-12", rank, plans=PlanCache(), **KW)
+    assert pinned.context.fixed_preset == "int15-12"
+    assert pinned.name == "fixed:int15-12"
+    via_option = build_engine(st, "fixed", rank, plans=PlanCache(),
+                              fixed_preset="int15-12", **KW)
+    rng = np.random.default_rng(2)
+    factors = tuple(np.asarray(rng.uniform(-1, 1, (d, rank)), np.float32)
+                    for d in st.shape)
+    for mode in range(st.ndim):
+        np.testing.assert_array_equal(np.asarray(pinned(factors, mode)),
+                                      np.asarray(via_option(factors, mode)))
+
+
+def test_backend_table_lists_presets():
+    table = backend_table()
+    assert "presets" in table.splitlines()[0]
+    assert "`int7`" in table and "`int15-12`" in table
+
+
+# ---------------------------------------------------------------------------
+# Budgeted candidate space + rejection before ranking
+# ---------------------------------------------------------------------------
+
+def test_budget_widens_default_candidates_and_none_keeps_lossless():
+    st = random_tensor((20, 16, 24), 400, seed=2)
+    plain = build_engine(st, "auto", 4, plans=PlanCache(), **KW)
+    assert all(candidate_lossless(c) for c in plain.report.candidates)
+    assert plain.report.accuracy_budget is None
+
+    budgeted = build_engine(st, "auto", 4, plans=PlanCache(),
+                            accuracy_budget=0.5, **KW)
+    rep = budgeted.report
+    assert set(preset_candidates()) <= set(rep.candidates)
+    assert rep.accuracy_budget == 0.5
+    # every surviving lossy candidate has a measured error per probed mode
+    for cand, per_mode in rep.timings.items():
+        if not candidate_lossless(cand):
+            assert set(rep.errors[cand]) >= set(per_mode)
+            assert all(e <= 0.5 for e in rep.errors[cand].values())
+
+
+def test_over_budget_candidate_rejected_before_ranking():
+    st = random_tensor((20, 16, 24), 400, seed=3)
+    eng = build_engine(st, "auto", 4, plans=PlanCache(),
+                       accuracy_budget=1e-9, candidates=FMT_CANDS, **KW)
+    rep = eng.report
+    # every lossy candidate measured over the (absurd) budget and none won
+    assert set(rep.winners.values()) == {"chunked"}
+    for cand in FMT_CANDS[1:]:
+        assert "over accuracy budget" in rep.skipped[cand], rep.skipped
+        assert cand not in rep.timings
+    # the rejected candidates' real measurements are still reported
+    assert any(rep.errors.get(c) for c in FMT_CANDS[1:])
+
+
+def test_budget_validation():
+    st = random_tensor((20, 16, 24), 300, seed=4)
+    with pytest.raises(ValueError, match="accuracy_budget.*> 0"):
+        build_engine(st, "auto", 4, plans=PlanCache(), accuracy_budget=0.0,
+                     **KW)
+    with pytest.raises(ValueError, match="accuracy_budget.*> 0"):
+        build_engine(st, "auto", 4, plans=PlanCache(), accuracy_budget=-0.1,
+                     **KW)
+    with pytest.raises(ValueError, match="only applies to engine='auto'"):
+        build_engine(st, "chunked", 4, plans=PlanCache(),
+                     accuracy_budget=0.1, **KW)
+    with pytest.raises(ValueError, match="only applies to engine='auto'"):
+        cp_als(st, 4, n_iters=1, engine=lambda f, m: None,
+               accuracy_budget=0.1)
+
+
+def test_rigged_clock_selects_fixed_point_winner(monkeypatch):
+    """When a fixed-point preset is genuinely fastest and within budget, the
+    tuner must select it — and cp_als must report its measured quantization
+    error while keeping the exact (slow-path) fit."""
+    _rig_clock(monkeypatch, lambda n, m: 1e-4 if n == "fixed:int7" else 1e-2)
+    st = random_tensor((18, 14, 16), 500, seed=12)
+    res = cp_als(st, 4, n_iters=2, engine="auto", accuracy_budget=0.9,
+                 candidates=FMT_CANDS, plans=PlanCache(), seed=13,
+                 track_diff=False, **KW)
+    rep = res.tune_report
+    assert set(rep.winners.values()) == {"fixed:int7"}
+    assert res.engine == "auto:fixed:int7"
+    # measured quantization error surfaces on the result
+    assert res.quant_error is not None
+    assert res.quant_error == max(rep.errors["fixed:int7"].values())
+    # lossy winner keeps the factors-only fit slow path
+    slow = fit_value(st, res.factors, res.lam)
+    assert abs(res.fit_history[-1] - slow) < 1e-6
+
+
+def test_quant_error_measured_on_lossy_mode_without_budget(monkeypatch):
+    """Legacy path (explicit lossy candidate, no budget, so no recorded
+    errors): CPResult.quant_error must be measured on a mode the lossy
+    winner actually serves — the dispatcher may route the last mode to a
+    lossless backend, whose float noise is not a quantization error."""
+    # fixed:int7 wins mode 0 only; chunked wins every other mode
+    _rig_clock(monkeypatch,
+               lambda n, m: 1e-4 if (n == "fixed:int7") == (m == 0) else 1e-2)
+    st = random_tensor((18, 14, 16), 500, seed=14)
+    res = cp_als(st, 4, n_iters=1, engine="auto",
+                 candidates=["chunked", "fixed:int7"], plans=PlanCache(),
+                 seed=15, track_diff=False, **KW)
+    rep = res.tune_report
+    assert rep.winners[0] == "fixed:int7"
+    assert rep.winners[st.ndim - 1] == "chunked"
+    assert rep.errors == {}                      # no budget, none recorded
+    # int7 quantization noise is ~1e-2; float reduction noise is ~1e-7
+    assert res.quant_error is not None and res.quant_error > 1e-4
+
+
+def test_conflicting_preset_spellings_rejected():
+    st = random_tensor((20, 16, 24), 300, seed=9)
+    with pytest.raises(ValueError, match="conflicting presets"):
+        build_engine(st, "fixed:int7", 4, plans=PlanCache(),
+                     fixed_preset="int15-12", **KW)
+    # agreeing spellings are fine
+    eng = build_engine(st, "fixed:int7", 4, plans=PlanCache(),
+                       fixed_preset="int7", **KW)
+    assert eng.context.fixed_preset == "int7"
+
+
+def test_cross_mode_bound_rejects_under_elision(monkeypatch):
+    """Under elision the un-probed modes lean on the quantization model: a
+    budget between the measured anchor error and slack × anchor admits the
+    candidate on a full sweep but must reject it when the other modes were
+    never measured.  The clock is rigged to keep the lossy candidate out of
+    the re-probe boundary, so its non-anchor modes deterministically stay
+    un-measured."""
+    st = random_tensor((20, 16, 24), 400, seed=5)
+    cands = ["chunked", "ref", "fixed:int7"]
+    # fixed:int7 is clearly slowest: it never wins a mode and (under
+    # elision with a tight margin) is never re-probed off the anchor
+    _rig_clock(monkeypatch, lambda n, m: 1e-2 if n == "fixed:int7" else 1e-4)
+
+    full = build_engine(st, "auto", 4, plans=PlanCache(), candidates=cands,
+                        accuracy_budget=0.9, elide=False, **KW)
+    errs = full.report.errors["fixed:int7"]
+    assert set(errs) == set(range(st.ndim))
+    anchor_err, worst = errs[0], max(errs.values())
+
+    # budget strictly between the worst measured error and slack × anchor:
+    # full probing admits, elision (bounded, not measured) must not
+    budget = min(worst * 1.2, CROSS_MODE_SLACK * anchor_err * 0.9)
+    if budget <= worst:  # guard: errors too uniform to separate the regimes
+        budget = worst * 1.05
+        assert budget < CROSS_MODE_SLACK * anchor_err
+    admitted = build_engine(st, "auto", 4, plans=PlanCache(),
+                            candidates=cands, accuracy_budget=budget,
+                            elide=False, **KW)
+    assert "fixed:int7" in admitted.report.timings
+
+    elided = build_engine(st, "auto", 4, plans=PlanCache(), candidates=cands,
+                          accuracy_budget=budget, elide=True,
+                          elide_margin=1.0, **KW)
+    rep = elided.report
+    assert "fixed:int7" not in rep.timings
+    assert "un-probed" in rep.skipped["fixed:int7"]
+    assert all(candidate_lossless(w) for w in rep.winners.values())
+
+
+# ---------------------------------------------------------------------------
+# Store: budget + errors persist, warm hits gated by budget_covers
+# ---------------------------------------------------------------------------
+
+def test_budget_covers_semantics():
+    assert budget_covers(None, None)
+    assert budget_covers(0.1, 0.1)
+    assert budget_covers(0.1, 0.5)      # looser request: winners still valid
+    assert not budget_covers(0.1, 0.01)  # stricter: must re-validate
+    assert not budget_covers(0.1, None)  # lossless-only request
+    assert not budget_covers(None, 0.1)  # entry never measured errors
+
+
+def test_store_roundtrips_budget_and_errors(tmp_path):
+    st = random_tensor((20, 16, 24), 400, seed=6)
+    path = tmp_path / "t.json"
+    key = WorkloadKey.from_tensor(st, 4, FMT_CANDS)
+    errors = {"fixed:int7": {0: 0.01, 1: 0.02, 2: 0.015}}
+    TuningStore(path).record(key, {0: "fixed:int7", 1: "chunked", 2: "chunked"},
+                             {"chunked": {0: 2e-3, 1: 1e-3, 2: 1e-3},
+                              "fixed:int7": {0: 1e-3, 1: 2e-3, 2: 2e-3}},
+                             budget=0.05, errors=errors)
+    entry = TuningStore(path).lookup(key)
+    assert entry.budget == 0.05
+    assert entry.errors == errors
+    assert all(isinstance(m, int)
+               for per in entry.errors.values() for m in per)
+    # budget-aware lookup
+    assert TuningStore(path).lookup(key, budget=0.05) is not None
+    assert TuningStore(path).lookup(key, budget=0.5) is not None
+    assert TuningStore(path).lookup(key, budget=0.01) is None
+    assert TuningStore(path).lookup(key, budget=None) is None
+
+
+def test_warm_hits_gated_by_budget(tmp_path, monkeypatch):
+    st = random_tensor((30, 24, 36), 700, seed=7)
+    path = tmp_path / "t.json"
+    cold = build_engine(st, "auto", 4, plans=PlanCache(),
+                        store=TuningStore(path), accuracy_budget=0.5,
+                        candidates=FMT_CANDS, **KW)
+    assert cold.report.source == "measured"
+
+    calls = _probe_counter(monkeypatch)
+    same = build_engine(st, "auto", 4, plans=PlanCache(),
+                        store=TuningStore(path), accuracy_budget=0.5,
+                        candidates=FMT_CANDS, **KW)
+    assert calls == [] and same.report.source == "persisted"
+    assert same.report.winners == cold.report.winners
+    assert same.report.errors == cold.report.errors
+
+    looser = build_engine(st, "auto", 4, plans=PlanCache(),
+                          store=TuningStore(path), accuracy_budget=0.9,
+                          candidates=FMT_CANDS, **KW)
+    assert calls == [] and looser.report.source == "persisted"
+
+    stricter = build_engine(st, "auto", 4, plans=PlanCache(),
+                            store=TuningStore(path), accuracy_budget=1e-9,
+                            candidates=FMT_CANDS, **KW)
+    assert stricter.report.source == "measured"   # re-probed
+    assert len(calls) > 0
+    assert all(candidate_lossless(w)
+               for w in stricter.report.winners.values())
+
+    calls.clear()
+    none_req = build_engine(st, "auto", 4, plans=PlanCache(),
+                            store=TuningStore(path),
+                            candidates=FMT_CANDS, **KW)
+    assert none_req.report.source == "measured"   # budgeted entry can't serve
+    assert len(calls) > 0
+
+
+# ---------------------------------------------------------------------------
+# Cost model: width-aware byte terms rank presets on cold start
+# ---------------------------------------------------------------------------
+
+def test_byte_terms_scale_with_preset_width():
+    st = random_tensor((40, 32, 24), 2000, seed=8)
+    narrow = {p: byte_terms(f"fixed:{p}", st, 8, 0)[3] for p in FIXED_PRESETS}
+    assert narrow["int3"] < narrow["int7"] < narrow["int15-12"]
+    # lossless backends move no narrow bytes
+    for name in ("ref", "alto", "chunked", "hetero"):
+        assert byte_terms(name, st, 8, 0)[3] == 0.0
+    # bare "fixed" prices the int16 default preset
+    assert byte_terms("fixed", st, 8, 0) == byte_terms("fixed:int7", st, 8, 0)
+
+
+def test_prior_ranks_narrower_presets_cheaper():
+    st = random_tensor((120, 100, 80), 200_000, seed=9)
+    prior = CostModelPrior()
+    order = prior.order(st, 16, [f"fixed:{p}" for p in FIXED_PRESETS])
+    assert order == ["fixed:int3", "fixed:int7", "fixed:int15-12"]
+    # a slower narrow path re-ranks against the float backends
+    slow_narrow = CostModelPrior(narrow_bandwidth=1e8)
+    assert (slow_narrow.seconds("fixed:int7", st, 16, 0)
+            > prior.seconds("fixed:int7", st, 16, 0))
+    # preset variants share their family's dispatch overhead
+    tuned = CostModelPrior(dispatch_overheads={"fixed": 0.123})
+    assert tuned.dispatch("fixed:int3") == 0.123
+
+
+def test_calibration_recovers_narrow_bandwidth(tmp_path):
+    """With lossy observations in the store the NNLS learns the narrow-int
+    throughput term; without them the coefficient falls back silently."""
+    from repro.engine import CalibratedPrior, WorkloadStats, device_fingerprint
+
+    gt = CostModelPrior(bandwidth=5e9, narrow_bandwidth=1.2e9,
+                        chunk_padding=1.6, hetero_overhead=1.4,
+                        dispatch_s=2e-4)
+    cands = ["alto", "chunked", "hetero", "ref", "fixed:int3", "fixed:int7",
+             "fixed:int15-12"]
+    store = TuningStore(tmp_path / "synth.json")
+    for shape, nnz in [((200, 160, 240), 50_000), ((400, 320, 120), 200_000),
+                       ((160, 480, 200, 40), 500_000),
+                       ((800, 100, 300), 1_000_000)]:
+        key = WorkloadKey(
+            shape=shape, nnz=nnz, density=nnz / np.prod(shape),
+            ndim=len(shape), rank=4, candidates=tuple(sorted(cands)),
+            device=tuple(sorted(device_fingerprint().items())))
+        stats = WorkloadStats.from_key(key)
+        timings = {c: {m: gt.seconds(c, stats, 4, m)
+                       for m in range(len(shape))} for c in cands}
+        winners = {m: min(cands, key=lambda c, m=m, t=timings: t[c][m])
+                   for m in range(len(shape))}
+        store.record(key, winners, timings)
+    prior = CalibratedPrior.from_store(store)
+    assert prior.used_fit
+    assert prior.bandwidth == pytest.approx(gt.bandwidth, rel=0.15)
+    assert prior.narrow_bandwidth == pytest.approx(gt.narrow_bandwidth,
+                                                   rel=0.15)
+    assert "narrow_bandwidth" in prior.calibration.fitted

@@ -9,13 +9,13 @@ try:
 except ImportError:  # offline container — deterministic replay shim
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.core import Q9_7, Q17_15, random_tensor, value_qformat
+from repro.core import Q17_15, Q9_7, random_tensor, value_qformat
 from repro.core.chunking import chunk_tensor
 from repro.core.mttkrp import mttkrp_coo
 from repro.kernels import mttkrp_fixed_pallas, mttkrp_pallas
-from repro.kernels.mttkrp_kernel import mttkrp_pallas_local
-from repro.kernels.mttkrp_fixed_kernel import mttkrp_fixed_pallas_local
 from repro.kernels import ref as kref
+from repro.kernels.mttkrp_fixed_kernel import mttkrp_fixed_pallas_local
+from repro.kernels.mttkrp_kernel import mttkrp_pallas_local
 
 SWEEP = [
     # shape, nnz, chunk_shape, capacity, rank

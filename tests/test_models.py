@@ -49,10 +49,8 @@ def test_flash_blocked_matches_naive(variant):
     k = jax.random.normal(jax.random.key(1), (b, s, 2, 8))
     v = jax.random.normal(jax.random.key(2), (b, s, 2, 8))
     pos = jnp.arange(s)
-    if variant == "chunk":
-        got = am._chunked_attn(cfg, q, k, v, pos, pos)
-    else:
-        got = am._flash(cfg, q, k, v, pos, pos)
+    got = (am._chunked_attn(cfg, q, k, v, pos, pos) if variant == "chunk"
+           else am._flash(cfg, q, k, v, pos, pos))
     want = _naive_attn(cfg, q, k, v, pos, pos)
     np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
 

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (Q9_7, Q17_15, random_tensor, value_qformat)
+from repro.core import Q17_15, Q9_7, random_tensor, value_qformat
 from repro.core.baselines import alto_order, mttkrp_alto, mttkrp_plain_coo
 from repro.core.chunking import chunk_tensor
 from repro.core.hetero import densify_tasks, mttkrp_hetero, split_tasks

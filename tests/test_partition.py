@@ -8,7 +8,7 @@ try:
 except ImportError:  # offline container — deterministic replay shim
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.core import random_tensor, decide_partition
+from repro.core import decide_partition, random_tensor
 from repro.core.chunking import chunk_tensor, replication_stats
 
 

@@ -1,0 +1,114 @@
+"""Qm.n fixed-point round-trip bounds (paper §IV-C) — the per-element
+guarantees the autotuner's accuracy-budget check builds on: quantization is
+off by at most half a step on in-range values, and `value_qformat` always
+picks a precision whose range covers the sampled tensor values."""
+import math
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container — deterministic replay shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core.qformat import (
+    CROSS_MODE_SLACK,
+    FIXED_PRESETS,
+    QFormat,
+    cross_mode_error_bound,
+    preset_error_bound,
+    value_qformat,
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    preset=st.sampled_from(sorted(FIXED_PRESETS)),
+    seed=st.integers(0, 10_000),
+    n=st.integers(1, 512),
+)
+def test_roundtrip_error_within_half_step_on_linf_normalized(preset, seed, n):
+    """quantize→dequantize error ≤ 1/(2·scale) for every preset, on inputs
+    in the L∞-normalized [-1, 1] range CP-ALS feeds the fixed engines."""
+    qf, _shift = FIXED_PRESETS[preset]
+    x = np.random.default_rng(seed).uniform(-1.0, 1.0, n).astype(np.float32)
+    # numpy path (build-time value quantization)
+    back_np = qf.quantize_np(x).astype(np.float64) / qf.scale
+    assert np.max(np.abs(back_np - x)) <= qf.max_abs_error + 1e-9
+    # jnp path (per-call factor quantization) — float32 rounding of x/scale
+    # itself can add at most a few ulps on top of the half-step bound
+    back_j = np.asarray(qf.dequantize(qf.quantize(x)))
+    assert np.max(np.abs(back_j - x)) <= qf.max_abs_error * (1 + 1e-5) + 1e-6
+    assert qf.max_abs_error == 1.0 / (2 * qf.scale)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    # up to ~2^14: beyond that a 16-bit storage cannot cover the range at
+    # all (int_bits saturates at 15), so "covers the sample" stops being a
+    # property the chooser can honor
+    vmax=st.floats(1e-3, 1.6e4),
+    seed=st.integers(0, 10_000),
+    n=st.integers(1, 256),
+)
+def test_value_qformat_range_covers_sampled_values(vmax, seed, n):
+    """The runtime-chosen value format must represent max|value| without
+    saturating: every sampled value round-trips within half a step."""
+    rng = np.random.default_rng(seed)
+    values = (rng.uniform(-1.0, 1.0, n) * vmax).astype(np.float64)
+    vq = value_qformat(values)
+    assert vq.storage_bits == 16
+    # the format's representable range covers the sample
+    assert vq.max_int / vq.scale >= np.max(np.abs(values)) * (1 - 1e-6)
+    back = vq.quantize_np(values).astype(np.float64) / vq.scale
+    assert np.max(np.abs(back - values)) <= vq.max_abs_error + 1e-12
+
+
+def test_value_qformat_empty_and_degenerate():
+    vq = value_qformat(np.asarray([]))
+    assert vq.storage_bits == 16
+    # all-zero values: any precision works, the chosen one must be valid
+    vq0 = value_qformat(np.zeros(5))
+    assert vq0.int_bits + vq0.frac_bits == 16
+
+
+@pytest.mark.parametrize("ndim", [3, 4, 5])
+def test_preset_error_estimates_order_the_presets(ndim):
+    """Coarser formats must carry larger first-order error estimates — the
+    ordering (not the absolute value) is what cold-start reasoning uses."""
+    b = {p: preset_error_bound(p, ndim) for p in FIXED_PRESETS}
+    assert b["int3"] > b["int7"] > 0
+    # int15-12 trades prec_shift truncation against a much finer scale and
+    # still lands well under int3
+    assert b["int15-12"] < b["int3"]
+    # more modes, more quantized gathers, more error
+    for p in FIXED_PRESETS:
+        assert preset_error_bound(p, ndim + 1) > preset_error_bound(p, ndim)
+
+
+def test_cross_mode_bound_prefers_measurement_over_model():
+    """With measurements the bound is slack × worst-measured; without, the
+    analytic estimate (with the same headroom) stands in."""
+    measured = {0: 0.01, 1: 0.03}
+    got = cross_mode_error_bound(measured, "int7", 3)
+    assert got == pytest.approx(CROSS_MODE_SLACK * 0.03)
+    # no measurement: analytic estimate with headroom
+    cold = cross_mode_error_bound({}, "int7", 3)
+    assert cold == pytest.approx(
+        CROSS_MODE_SLACK * preset_error_bound("int7", 3))
+    # the slack covers mode-to-mode rearrangement, so it must exceed 1
+    assert CROSS_MODE_SLACK > 1.0
+
+
+def test_qformat_storage_dtypes_follow_bit_width():
+    assert QFormat(5, 3).storage_bits == 8
+    assert QFormat(9, 7).storage_bits == 16
+    assert QFormat(17, 15).storage_bits == 32
+    assert QFormat(5, 3).np_dtype == np.int8
+    assert QFormat(9, 7).np_dtype == np.int16
+    assert QFormat(17, 15).np_dtype == np.int32
+    for qf, _ in FIXED_PRESETS.values():
+        assert qf.min_int == -(1 << (qf.storage_bits - 1))
+        assert qf.max_int == (1 << (qf.storage_bits - 1)) - 1
+        assert math.log2(qf.scale) == qf.frac_bits
