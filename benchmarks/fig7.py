@@ -2,8 +2,9 @@
 implementations, all modes, rank 10.
 
 Device roles on this host (DESIGN.md §2): the PRISM chunked engine plays
-UPMEM PIM; ALTO-ordered segment-sum plays the CPU baseline; plain COO
-scatter plays the GPU (BLCO) baseline.  Peak-performance fraction is
+UPMEM PIM; the ALTO linearized format plays the CPU baseline; CSF fiber
+trees play the tree-compressed CPU layout; plain COO scatter plays the GPU
+(BLCO) baseline.  Peak-performance fraction is
 useful-FLOPs / (wall × host peak), mirroring the paper's efficiency metric —
 the structural (dry-run) roofline fraction for the TPU target lives in
 EXPERIMENTS.md §Roofline.
@@ -143,8 +144,8 @@ def run(fast: bool = False, store: str | TuningStore | None = None):
     if fast:
         tensors = ["nell2", "delicious"]
     engines = [("prism-chunked", "chunked"), ("prism-fixed", "fixed"),
-               ("alto-cpu", "alto"), ("coo-gpu-style", "ref"),
-               ("autotuned", "auto")]
+               ("alto-cpu", "alto"), ("csf-fiber", "csf"),
+               ("coo-gpu-style", "ref"), ("autotuned", "auto")]
     for tname in tensors:
         st = table1_tensor(tname, nnz=8000 if fast else None)
         factors = [jnp.asarray(f) for f in init_factors(st.shape, RANK, 0)]

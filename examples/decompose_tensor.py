@@ -5,7 +5,7 @@ autotuner — with convergence tracking.
 
   PYTHONPATH=src python examples/decompose_tensor.py [--tensor amazon]
       [--rank 10] [--iters 5]
-      [--engine auto|hetero|chunked|fixed|distributed|ref|alto|pallas]
+      [--engine auto|hetero|chunked|fixed|distributed|ref|alto|csf|pallas]
       [--store [PATH]] [--max-probes K]
 
 `--store` persists autotune winners (default ~/.cache/repro/autotune.json,

@@ -6,7 +6,10 @@ exactly as the paper leaves them on the CPU.  The MTTKRP engine is swappable
 — any name registered in `repro.engine` (see its backend registry):
 
   engine="ref"         plain COO (paper Fig. 1 definition)
-  engine="alto"        ALTO-ordered baseline
+  engine="alto"        ALTO linearized format (repro.formats.alto): one
+                       bit-interleaved index serving every mode
+  engine="csf"         CSF fiber trees (repro.formats.csf): interior factor
+                       rows fetched once per fiber
   engine="chunked"     PRISM chunked format (float)
   engine="fixed"       PRISM chunked + paper Alg. 2 fixed point ("int7"/"int15-12")
   engine="hetero"      dense(MXU)/sparse split (paper §IV-D analogue)

@@ -70,7 +70,7 @@ def distributed_mttkrp_fn(
         )
         if reduce == "psum":
             return jax.lax.psum(local, data_axis)
-        elif reduce == "psum_scatter":
+        if reduce == "psum_scatter":
             # Each data shard ends up owning a contiguous row block:
             # ICI bytes drop from 2·(g-1)/g·|out| (all-reduce) to (g-1)/g·|out|.
             return jax.lax.psum_scatter(

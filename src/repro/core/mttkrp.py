@@ -31,6 +31,8 @@ __all__ = [
     "mttkrp_chunked",
     "mttkrp_coo_fixed",
     "mttkrp_chunked_fixed",
+    "mttkrp_csf",
+    "mttkrp_alto",
     "chunked_device_arrays",
     "gather_factor_blocks",
 ]
@@ -120,6 +122,75 @@ def mttkrp_chunked(
 
 
 # ---------------------------------------------------------------------------
+# Format-subsystem kernels (repro.formats): CSF fiber trees and the ALTO
+# linearized index.  Both are exact (lossless) float paths — they change the
+# *memory access structure*, not the arithmetic.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("mode", "inner_mode", "mid_modes",
+                                   "out_dim", "n_fibers"))
+def mttkrp_csf(
+    factors,
+    inner_coord,
+    values,
+    fiber_ids,
+    fiber_coords,
+    *,
+    mode: int,
+    inner_mode: int,
+    mid_modes: tuple[int, ...],
+    out_dim: int,
+    n_fibers: int,
+):
+    """spMTTKRP over a CSF mode tree (see `repro.formats.csf`): two sorted
+    segment reductions, nonzeros → fibers → output rows.
+
+    The interior (root + mid) factor rows are gathered once per *fiber*
+    instead of once per nonzero — the fiber-reuse win CSF exists for; only
+    the innermost factor is gathered per nonzero.
+
+    inner_coord (nnz,), values (nnz,), fiber_ids (nnz, sorted),
+    fiber_coords (n_fibers, N; inner column unused).  Returns (out_dim, R).
+    """
+    part = values[:, None].astype(jnp.float32) * factors[inner_mode][inner_coord]
+    fib = jax.ops.segment_sum(part, fiber_ids, num_segments=n_fibers,
+                              indices_are_sorted=True)
+    for m in mid_modes:
+        fib = fib * factors[m][fiber_coords[:, m]]
+    return jax.ops.segment_sum(fib, fiber_coords[:, mode],
+                               num_segments=out_dim, indices_are_sorted=True)
+
+
+def _alto_decode(key_words, positions: tuple[int, ...]):
+    """Gather one mode's coordinate bits back out of the packed linearized
+    key: `positions[b]` is the key bit holding coordinate bit `b`.  The
+    loop is unrolled at trace time (positions are static), so the decode
+    compiles to a handful of shift/mask/or ops per word."""
+    c = jnp.zeros(key_words.shape[0], jnp.int32)
+    for b, p in enumerate(positions):
+        bit = (key_words[:, p // 32] >> jnp.uint32(p % 32)) & jnp.uint32(1)
+        c = c | (bit.astype(jnp.int32) << b)
+    return c
+
+
+@partial(jax.jit, static_argnames=("mode", "positions", "out_dim"))
+def mttkrp_alto(factors, key_words, values, *, mode: int,
+                positions: tuple[tuple[int, ...], ...], out_dim: int):
+    """spMTTKRP over the ALTO linearized index (see `repro.formats.alto`):
+    every mode's coordinates are de-interleaved from ONE key stream
+    (`key_words`, (nnz, W) uint32, sorted by key), so a single tensor copy
+    serves all modes.  The key order clusters spatially-near nonzeros,
+    which is where the gather locality comes from."""
+    part = values[:, None].astype(jnp.float32)
+    for m, f in enumerate(factors):
+        if m == mode:
+            continue
+        part = part * f[_alto_decode(key_words, positions[m])]
+    seg = _alto_decode(key_words, positions[mode])
+    return jax.ops.segment_sum(part, seg, num_segments=out_dim)
+
+
+# ---------------------------------------------------------------------------
 # Fixed point (paper Algorithm 2) — bit-exact Q arithmetic.
 # ---------------------------------------------------------------------------
 
@@ -134,8 +205,7 @@ def _fixed_partials(qfactor_rows, qvalues, mode, matrix_frac, value_frac, prec_s
         part = part * qfactor_rows[m].astype(jnp.int32)
         part = jnp.right_shift(part, matrix_frac)  # arithmetic shift (Alg.2 l.12)
     part = part * qvalues[..., None].astype(jnp.int32)
-    part = jnp.right_shift(part, value_frac + prec_shift)  # Alg.2 l.15
-    return part
+    return jnp.right_shift(part, value_frac + prec_shift)  # Alg.2 l.15
 
 
 @partial(jax.jit, static_argnames=("mode", "out_dim", "matrix_frac", "value_frac", "prec_shift"))

@@ -53,7 +53,33 @@ class SparseTensor:
         return float(np.linalg.norm(self.values.astype(np.float64)))
 
     def permuted(self, order: np.ndarray) -> SparseTensor:
+        """Reorder the nonzeros by `order`, which must be a permutation of
+        ``arange(nnz)`` — fancy indexing happily accepts short, repeated or
+        boolean indexers and silently drops/duplicates nonzeros."""
+        order = np.asarray(order)
+        if (order.shape != (self.nnz,)
+                or not np.issubdtype(order.dtype, np.integer)):
+            raise ValueError(
+                f"order must be an integer permutation of arange(nnz="
+                f"{self.nnz}); got shape {order.shape} dtype {order.dtype}")
+        seen = np.zeros(self.nnz, dtype=bool)
+        in_range = (order >= 0) & (order < self.nnz)
+        seen[order[in_range]] = True
+        if not (in_range.all() and seen.all()):
+            raise ValueError(
+                f"order is not a permutation of arange(nnz={self.nnz}): "
+                "every nonzero must appear exactly once")
         return SparseTensor(self.coords[order], self.values[order], self.shape)
+
+
+#: Collision top-up policy (see `random_tensor`): after this many exact-
+#: shortfall rejection rounds, small tensors switch to an exact fill from
+#: the not-yet-used cells; tensors too large to enumerate raise after the
+#: round cap instead of hanging (statistically unreachable for any sparse
+#: request — stalls need density near 1, which implies an enumerable shape).
+_TOPUP_EXACT_AFTER = 16
+_TOPUP_EXACT_CELLS = 1 << 24
+_TOPUP_MAX_ROUNDS = 1024
 
 
 def _dedup(coords: np.ndarray, values: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -80,25 +106,71 @@ def random_tensor(
                    like 5D_large).
       "powerlaw" — Zipf-distributed coordinates per mode (imbalanced, like
                    Delicious), which stresses the partition decider.
+
+    The returned tensor has EXACTLY `nnz` nonzeros (capped at the number of
+    cells): `_dedup` merges duplicate draws, so a single batch would come up
+    short — powerlaw tensors by up to ~10% — and every consumer sized off
+    the request (TABLE1 workload fingerprints, benchmark labels) would be
+    silently wrong.  Collision shortfall is topped up with fresh draws until
+    the target is met.
     """
     rng = np.random.default_rng(seed)
-    cols = []
-    for dim in shape:
-        if distribution == "uniform":
-            c = rng.integers(0, dim, size=nnz, dtype=np.int64)
-        elif distribution == "powerlaw":
-            # Zipf over the dimension, shuffled so hot rows are scattered.
-            raw = rng.zipf(zipf_a, size=nnz) - 1
-            c = np.minimum(raw, dim - 1)
-            perm = rng.permutation(dim)
-            c = perm[c]
+    shape = tuple(int(d) for d in shape)
+    target = min(int(nnz), math.prod(shape))
+    # Powerlaw scatter permutations are drawn once per mode and shared by
+    # every draw batch, so top-ups hit the same hot rows as the first batch
+    # (the imbalanced character must survive the top-up).
+    perms = [rng.permutation(dim) if distribution == "powerlaw" else None
+             for dim in shape]
+
+    def draw(n: int) -> np.ndarray:
+        cols = []
+        for dim, perm in zip(shape, perms, strict=True):
+            if distribution == "uniform":
+                c = rng.integers(0, dim, size=n, dtype=np.int64)
+            elif distribution == "powerlaw":
+                # Zipf over the dimension, shuffled so hot rows are scattered.
+                raw = rng.zipf(zipf_a, size=n) - 1
+                c = perm[np.minimum(raw, dim - 1)]
+            else:
+                raise ValueError(f"unknown distribution {distribution!r}")
+            cols.append(c)
+        return np.stack(cols, axis=1).astype(np.int32)
+
+    def values_for(n: int) -> np.ndarray:
+        return rng.uniform(-value_scale, value_scale, size=n).astype(np.float32)
+
+    coords, values = _dedup(draw(int(nnz)), values_for(int(nnz)))
+    for rounds in range(_TOPUP_MAX_ROUNDS):
+        if coords.shape[0] >= target:
+            break
+        # Drawing exactly the shortfall adds at most that many new uniques,
+        # so the loop converges to `target` from below and never overshoots.
+        need = target - coords.shape[0]
+        # Rejection sampling stalls when the request approaches the cell
+        # count (a zipf tail makes the last unseen cells nearly
+        # unreachable — a coupon-collector hang); such requests only arise
+        # on small, enumerable tensors, so fill the shortfall exactly from
+        # the missing cells instead.
+        if rounds >= _TOPUP_EXACT_AFTER and math.prod(shape) <= _TOPUP_EXACT_CELLS:
+            missing = np.setdiff1d(
+                np.arange(math.prod(shape), dtype=np.int64),
+                np.ravel_multi_index(tuple(coords.T), shape).astype(np.int64),
+                assume_unique=True)
+            pick = rng.choice(missing, size=need, replace=False)
+            extra = np.stack(np.unravel_index(pick, shape), axis=1).astype(np.int32)
         else:
-            raise ValueError(f"unknown distribution {distribution!r}")
-        cols.append(c)
-    coords = np.stack(cols, axis=1).astype(np.int32)
-    values = rng.uniform(-value_scale, value_scale, size=nnz).astype(np.float32)
-    coords, values = _dedup(coords, values)
-    return SparseTensor(coords, values, tuple(int(d) for d in shape))
+            extra = draw(need)
+        coords, values = _dedup(
+            np.concatenate([coords, extra]),
+            np.concatenate([values, values_for(need)]))
+    else:
+        raise ValueError(
+            f"random_tensor could not reach nnz={target} on shape {shape} "
+            f"({distribution!r}) within {_TOPUP_MAX_ROUNDS} top-up rounds — "
+            "the request is too dense for rejection sampling on a tensor "
+            "too large to fill exactly; lower nnz")
+    return SparseTensor(coords, values, shape)
 
 
 # Table I of the paper, scaled so the *relative* mode sizes and the balanced /

@@ -145,7 +145,9 @@ def build_engine(
                    calibrated prior's residual-derived margin).
     options      — EngineContext fields: mem_bytes, chunk_shape, capacity,
                    fixed_preset, lockfree_mode, dense_fraction, mesh, reduce,
-                   interpret.
+                   interpret, formats (a `repro.formats.FormatCache` — pass
+                   one to isolate the csf/alto layout cache, as the plan
+                   cache is isolated with `plans=`).
     """
     if callable(method):
         return Engine(getattr(method, "__name__", "custom"), method)

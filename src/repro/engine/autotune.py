@@ -52,8 +52,9 @@ import numpy as np
 from ..core.cpals import init_factors
 from ..core.mttkrp import mttkrp_coo
 from ..core.qformat import FIXED_PRESETS, cross_mode_error_bound, value_qformat
+from ..formats import registered_formats
 from .calibrate import CalibratedPrior, CalibrationError
-from .costmodel import CostModelPrior, default_prior
+from .costmodel import CostModelPrior, WorkloadStats, default_prior
 from .persist import StoredEntry, TuningStore, WorkloadKey, resolve_store
 from .registry import (
     Engine,
@@ -365,7 +366,20 @@ def autotune_engine(
     # -- cold start: rank by the prior, probe a budgeted subset ------------
     prior_obj, prior_name = _resolve_prior(prior, tuning_store)
     n_devices = len(jax.devices())
-    order = prior_obj.order(ctx.st, ctx.rank, list(candidates), modes,
+    # When the candidate space holds a format backend (csf/alto — the
+    # backend name doubles as its layout's registry name), measure the
+    # tensor's layout statistics once and hand the prior a stats-carrying
+    # view: the csf/alto byte models then rank on *measured* fiber counts,
+    # and the same numbers are persisted with the entry (schema v4) so
+    # calibration trains on what prediction used.
+    fmt_stats = None
+    fmt_names = set(registered_formats()) - {"coo"}
+    if any(parse_candidate(c)[0] in fmt_names for c in candidates):
+        fmt_stats = ctx.formats.format_stats(ctx.st)
+    stats_view = (WorkloadStats(shape=ctx.st.shape, nnz=ctx.st.nnz,
+                                format_stats=fmt_stats)
+                  if fmt_stats is not None else ctx.st)
+    order = prior_obj.order(stats_view, ctx.rank, list(candidates), modes,
                             interpret=ctx.interpret, n_devices=n_devices)
     skipped: dict[str, str] = {}
     probe_list = list(order)
@@ -497,12 +511,12 @@ def autotune_engine(
         anchor = modes[0]
         alive = [n for n in probe_list if _probe(n, anchor)]
         for n in alive:
-            base = prior_obj.seconds(n, ctx.st, ctx.rank, anchor,
+            base = prior_obj.seconds(n, stats_view, ctx.rank, anchor,
                                      interpret=ctx.interpret,
                                      n_devices=n_devices)
             predicted[n] = {
                 m: timings[n][anchor]
-                * prior_obj.seconds(n, ctx.st, ctx.rank, m,
+                * prior_obj.seconds(n, stats_view, ctx.rank, m,
                                     interpret=ctx.interpret,
                                     n_devices=n_devices) / base
                 for m in modes if m != anchor}
@@ -586,7 +600,9 @@ def autotune_engine(
         with contextlib.suppress(OSError):
             tuning_store.record(key, winners, timings, overall=overall,
                                 warmup=warmup, reps=reps,
-                                budget=accuracy_budget, errors=errors)
+                                budget=accuracy_budget, errors=errors,
+                                format_stats=(fmt_stats.to_json()
+                                              if fmt_stats else None))
 
     # Drop losing engines so their device-resident data (reordered copies,
     # densified blocks, ...) doesn't stay alive for the whole CP-ALS run.

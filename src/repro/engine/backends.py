@@ -3,7 +3,10 @@
 Each maps one of the paper's execution arms onto this host:
 
   ref          plain COO scatter (paper Fig. 1; the "GPU/BLCO" role)
-  alto         ALTO-ordered segment-sum (the "CPU" role)
+  alto         ALTO linearized format: one bit-interleaved index serving
+               every mode, de-interleaved at kernel time (the "CPU" role)
+  csf          CSF fiber trees (repro.formats.csf): per-mode mode trees
+               with fiber-level factor reuse
   chunked      PRISM chunked format, float (the "PIM" role)
   fixed        PRISM chunked + Alg.-2 fixed point (paper §IV-C)
   hetero       dense(MXU)/sparse split (paper §IV-D collaboration)
@@ -12,7 +15,8 @@ Each maps one of the paper's execution arms onto this host:
 
 All chunk-based builders pull their ChunkedTensor / device arrays from the
 context's PlanCache, so building several backends against one tensor chunks
-it exactly once.
+it exactly once; the format-based builders (`csf`, `alto`) likewise pull
+their layouts from the context's FormatCache.
 """
 from __future__ import annotations
 
@@ -46,16 +50,51 @@ def _build_ref(ctx: EngineContext):
 
 @register_backend(
     "alto",
-    description="ALTO-ordered segment-sum baseline (CPU role)")
+    description="ALTO linearized index: one bit-interleaved copy serves all modes (CPU role)")
 def _build_alto(ctx: EngineContext):
-    order = baselines.alto_order(ctx.st.coords, ctx.st.shape)
-    a_coords = jnp.asarray(ctx.st.coords[order])
-    a_values = jnp.asarray(ctx.st.values[order])
+    from ..formats.alto import MAX_KEY_BITS, alto_key_bits
     shape = ctx.st.shape
+    if alto_key_bits(shape) > MAX_KEY_BITS:
+        # The packed linearization caps at 64 key bits (BLCO block splitting
+        # is the ROADMAP lift); beyond it, degrade to the ALTO-*ordered* COO
+        # baseline — same traversal order, explicit coordinates.
+        order = baselines.alto_order(ctx.st.coords, shape)
+        a_coords = jnp.asarray(ctx.st.coords[order])
+        a_values = jnp.asarray(ctx.st.values[order])
+
+        def engine(factors, mode):
+            return baselines.mttkrp_alto(tuple(factors), a_coords, a_values,
+                                         mode=mode, out_dim=shape[mode])
+        return engine
+
+    at = ctx.formats.alto(ctx.st)
+    dev = ctx.formats.device_alto(ctx.st)
+    positions = at.positions
 
     def engine(factors, mode):
-        return baselines.mttkrp_alto(tuple(factors), a_coords, a_values,
-                                     mode=mode, out_dim=shape[mode])
+        return mttkrp.mttkrp_alto(
+            tuple(factors), dev["key_words"], dev["values"],
+            mode=mode, positions=positions, out_dim=shape[mode])
+    return engine
+
+
+@register_backend(
+    "csf",
+    description="CSF fiber trees: interior factor rows fetched once per fiber")
+def _build_csf(ctx: EngineContext):
+    st, shape, formats = ctx.st, ctx.st.shape, ctx.formats
+
+    def engine(factors, mode):
+        # Trees build lazily per mode (the autotuner may only ever probe an
+        # anchor mode) and come from the FormatCache, so CP-ALS and repeated
+        # builds against one tensor construct each tree exactly once.
+        tree = formats.csf(st, mode)
+        dev = formats.device_csf(st, mode)
+        return mttkrp.mttkrp_csf(
+            tuple(factors), dev["inner_coord"], dev["values"],
+            dev["fiber_ids"], dev["fiber_coords"],
+            mode=mode, inner_mode=tree.inner_mode, mid_modes=tree.mid_modes,
+            out_dim=shape[mode], n_fibers=tree.n_fibers)
     return engine
 
 

@@ -11,15 +11,19 @@ memory-bound model: cold-start ranking improves with every workload tuned.
 
 The per-backend byte models are linear in the reparametrized coefficients
 
-    seconds ≈ a0·fixed + a1·padded + a2·densified + a3·narrow + dispatch[backend]
+    seconds ≈ a0·fixed + a1·padded + a2·densified + a3·narrow + a4·indexed
+              + dispatch[backend]
 
 with ``a0 = 1/bandwidth``, ``a1 = chunk_padding/bandwidth``,
-``a2 = chunk_padding·hetero_overhead/bandwidth`` and
+``a2 = chunk_padding·hetero_overhead/bandwidth``,
 ``a3 = 1/narrow_bandwidth`` — the per-width bandwidth term: `narrow` counts
 bytes moved through quantized int paths, already scaled by each candidate's
 preset storage width, so one learned throughput coefficient prices every
-Qm.n width (see `costmodel.byte_terms`).  The fit is one weighted least
-squares solve —
+Qm.n width (see `costmodel.byte_terms`) — and ``a4 = 1/indexed_bandwidth``,
+the throughput of format-index traffic (CSF fiber-tree levels, ALTO key
+words), whose design column uses the `FormatStats` persisted with each
+entry when present (schema v4) and the balls-in-bins estimate otherwise,
+exactly as prediction does.  The fit is one weighted least squares solve —
 rows are weighted by ``1/seconds`` to minimize *relative* error, since a
 giant tensor must not drown out the small ones the ranking also serves.
 Recovered coefficients are sanitized (positivity, physical clamps) and any
@@ -58,10 +62,11 @@ __all__ = [
     "ranking_accuracy",
 ]
 
-#: Fewest observations worth fitting: the model has 4 byte coefficients plus
+#: Fewest observations worth fitting: the model has 5 byte coefficients plus
 #: one dispatch term per backend, so one full sweep of a 3-D tensor over 4
 #: candidates (12 rows) is the floor for a non-degenerate solve (the narrow
-#: column is all-zero without lossy candidates and drops out of the fit).
+#: column is all-zero without lossy candidates, the indexed column without
+#: format-backend rows — either drops out of the fit).
 MIN_OBSERVATIONS = 12
 
 _BANDWIDTH_RANGE = (1e8, 1e13)   # B/s — below DDR3 single-channel / above HBM3e
@@ -88,10 +93,18 @@ def _n_devices(key) -> int:
 
 
 def _design_terms(backend: str, stats: WorkloadStats, rank: int, mode: int,
-                  n_devices: int) -> tuple[float, float, float, float]:
-    """The four byte columns of one observation's design row — the same
+                  n_devices: int) -> tuple[float, float, float, float, float]:
+    """The five byte columns of one observation's design row — the same
     decomposition `CostModelPrior.seconds` predicts with, by construction."""
     return device_byte_terms(backend, stats, rank, mode, n_devices=n_devices)
+
+
+def _obs_stats(o: Observation) -> WorkloadStats:
+    """Training stats for one observation: the entry's persisted
+    `FormatStats` when the store recorded them (schema v4), else the
+    estimate `WorkloadStats.from_key` falls back to — matching what the
+    prior will use at prediction time for a store-only workload."""
+    return WorkloadStats.from_key(o.key, format_stats=o.format_stats)
 
 
 def _base_backend(candidate: str) -> str:
@@ -222,13 +235,12 @@ class CalibratedPrior(CostModelPrior):
         # preset variant shares its family's launch path, so their rows
         # pool into one dispatch coefficient instead of fragmenting.
         backends = tuple(sorted({_base_backend(o.backend) for o in obs}))
-        col_of = {b: 4 + i for i, b in enumerate(backends)}
-        a = np.zeros((len(obs), 4 + len(backends)))
+        col_of = {b: 5 + i for i, b in enumerate(backends)}
+        a = np.zeros((len(obs), 5 + len(backends)))
         t = np.empty(len(obs))
         for i, o in enumerate(obs):
-            stats = WorkloadStats.from_key(o.key)
-            a[i, :4] = _design_terms(o.backend, stats, o.key.rank, o.mode,
-                                     _n_devices(o.key))
+            a[i, :5] = _design_terms(o.backend, _obs_stats(o), o.key.rank,
+                                     o.mode, _n_devices(o.key))
             a[i, col_of[_base_backend(o.backend)]] = 1.0
             t[i] = o.seconds
         # Weight by 1/t: minimize relative residuals, not absolute seconds.
@@ -236,7 +248,8 @@ class CalibratedPrior(CostModelPrior):
         theta = _nnls(a * w[:, None], t * w)
 
         prior = cls._sanitize(theta, backends,
-                              has_narrow=bool(a[:, 3].any()))
+                              has_narrow=bool(a[:, 3].any()),
+                              has_indexed=bool(a[:, 4].any()))
         prior.calibration = prior._residual_report(obs, backends)
         # Model-selection guard: a fit on thin, collinear data (a handful of
         # same-scale dispatch-dominated workloads) can explain the *seconds*
@@ -252,6 +265,7 @@ class CalibratedPrior(CostModelPrior):
             prior = cls(bandwidth=d.bandwidth, chunk_padding=d.chunk_padding,
                         hetero_overhead=d.hetero_overhead,
                         narrow_bandwidth=d.narrow_bandwidth,
+                        indexed_bandwidth=d.indexed_bandwidth,
                         interpret_penalty=d.interpret_penalty,
                         dispatch_s=d.dispatch_s,
                         distributed_dispatch_s=d.distributed_dispatch_s,
@@ -268,12 +282,13 @@ class CalibratedPrior(CostModelPrior):
 
     @classmethod
     def _sanitize(cls, theta: np.ndarray, backends: tuple[str, ...], *,
-                  has_narrow: bool = False) -> CalibratedPrior:
+                  has_narrow: bool = False,
+                  has_indexed: bool = False) -> CalibratedPrior:
         """Map the raw least-squares solution back to physical coefficients,
         keeping the analytic default for anything unfittable (non-positive,
         non-finite, or outside its physical clamp)."""
         d = default_prior
-        a0, a1, a2, a3 = (float(x) for x in theta[:4])
+        a0, a1, a2, a3, a4 = (float(x) for x in theta[:5])
         fallbacks: list[str] = []
 
         if math.isfinite(a0) and a0 > 0:
@@ -301,10 +316,18 @@ class CalibratedPrior(CostModelPrior):
             narrow_bandwidth = bandwidth
             if has_narrow:
                 fallbacks.append("narrow_bandwidth")
+        if has_indexed and math.isfinite(a4) and a4 > 0:
+            indexed_bandwidth = _clamp(1.0 / a4, *_BANDWIDTH_RANGE)
+        else:
+            # Same policy as `narrow`: no format-backend observations means
+            # the indexed column never entered the solve.
+            indexed_bandwidth = bandwidth
+            if has_indexed:
+                fallbacks.append("indexed_bandwidth")
 
         dispatch: dict[str, float] = {}
         for i, b in enumerate(backends):
-            v = float(theta[4 + i])
+            v = float(theta[5 + i])
             if math.isfinite(v) and v > _DISPATCH_MIN:
                 dispatch[b] = _clamp(v, *_DISPATCH_RANGE)
             else:
@@ -316,6 +339,7 @@ class CalibratedPrior(CostModelPrior):
         prior = cls(bandwidth=bandwidth, chunk_padding=chunk_padding,
                     hetero_overhead=hetero_overhead,
                     narrow_bandwidth=narrow_bandwidth,
+                    indexed_bandwidth=indexed_bandwidth,
                     interpret_penalty=d.interpret_penalty,
                     dispatch_s=d.dispatch_s,
                     distributed_dispatch_s=d.distributed_dispatch_s,
@@ -329,8 +353,7 @@ class CalibratedPrior(CostModelPrior):
         sq_errs: list[float] = []
         per_backend: dict[str, list[float]] = {}
         for o in obs:
-            stats = WorkloadStats.from_key(o.key)
-            pred = self.seconds(o.backend, stats, o.key.rank, o.mode,
+            pred = self.seconds(o.backend, _obs_stats(o), o.key.rank, o.mode,
                                 n_devices=_n_devices(o.key))
             rel = abs(pred - o.seconds) / o.seconds
             rel_errs.append(rel)
@@ -343,6 +366,7 @@ class CalibratedPrior(CostModelPrior):
             "chunk_padding": self.chunk_padding,
             "hetero_overhead": self.hetero_overhead,
             "narrow_bandwidth": self.narrow_bandwidth,
+            "indexed_bandwidth": self.indexed_bandwidth,
         }
         fitted.update({f"dispatch[{b}]": v
                        for b, v in sorted(self.dispatch_overheads.items())})
@@ -378,7 +402,7 @@ def ranking_accuracy(store: TuningStore, prior: CostModelPrior, *,
     for e in store.entries():
         if store.expired(e) or e.key.device != want:
             continue
-        stats = WorkloadStats.from_key(e.key)
+        stats = WorkloadStats.from_key(e.key, format_stats=e.format_stats)
         nd = _n_devices(e.key)
         for mode in range(e.key.ndim):
             measured = {b: per[mode] for b, per in e.timings.items()

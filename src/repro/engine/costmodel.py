@@ -31,21 +31,35 @@ The per-backend models mirror how each execution strategy touches memory:
                that preset's storage width — the whole point of the paper's
                narrow-int path is fewer bytes against the memory roofline.
                Lossy — only admitted under an accuracy budget.
+  csf          CSF fiber trees (repro.formats.csf): interior factor gathers
+               scale with the *fiber* count, not nnz — the model consumes
+               `FormatStats` fiber counts (measured when the autotuner has
+               the live tensor, balls-in-bins-estimated from (shape, nnz)
+               otherwise) so a long-fibered tensor ranks csf ahead of COO
+               on a cold start.
+  alto         ALTO linearized index: the per-mode coordinate columns are
+               replaced by one packed key stream (FormatStats.key_words ·
+               4 bytes/nnz), de-interleaved at kernel time.
 
-Every model is decomposed into four byte components (`byte_terms`):
+Every model is decomposed into five byte components (`byte_terms`):
 
     seconds = (fixed + chunk_padding·padded + chunk_padding·hetero_overhead·densified)
-              / bandwidth  +  narrow / narrow_bandwidth  +  dispatch(backend)
+              / bandwidth  +  narrow / narrow_bandwidth
+              + indexed / indexed_bandwidth  +  dispatch(backend)
 
 where `narrow` counts the bytes moved through quantized (int8/int16/int32)
 paths — already scaled by the preset's storage width — and
 `narrow_bandwidth` is the effective throughput of that traffic (quantize /
 dequantize arithmetic rides on every narrow byte, so it need not equal the
-float-stream bandwidth).  The model stays *linear* in the reparametrized
-coefficients (1/bandwidth, chunk_padding/bandwidth,
-chunk_padding·hetero_overhead/bandwidth, 1/narrow_bandwidth, and the
-per-backend dispatch terms) — exactly what `calibrate.py` needs to fit them
-by least squares against the tuning store's measured timings.
+float-stream bandwidth).  `indexed` counts the bytes of *format index
+structure* (CSF fiber pointers/coords, ALTO key words) whose consumption
+carries extra address arithmetic — bit de-interleaves, fiber-tree walks —
+priced at its own `indexed_bandwidth`.  The model stays *linear* in the
+reparametrized coefficients (1/bandwidth, chunk_padding/bandwidth,
+chunk_padding·hetero_overhead/bandwidth, 1/narrow_bandwidth,
+1/indexed_bandwidth, and the per-backend dispatch terms) — exactly what
+`calibrate.py` needs to fit them by least squares against the tuning
+store's measured timings.
 """
 from __future__ import annotations
 
@@ -53,6 +67,7 @@ import dataclasses
 import math
 
 from ..core.qformat import FIXED_PRESETS
+from ..formats import MAX_KEY_BITS, FormatStats
 
 __all__ = [
     "CostModelPrior",
@@ -92,24 +107,47 @@ class WorkloadStats:
     """The tensor statistics the byte models consume — duck-compatible with
     `SparseTensor` (shape/nnz/ndim), constructible from a persisted
     `WorkloadKey` so calibration can evaluate the prior on workloads whose
-    tensors are long gone."""
+    tensors are long gone.
+
+    `format_stats` (a `repro.formats.FormatStats`) carries the layout
+    statistics — per-mode fiber counts, interleave key width — the csf/alto
+    byte models need; None falls back to the balls-in-bins estimate from
+    (shape, nnz) inside `byte_terms`.  The autotuner attaches measured
+    stats for live tensors and persists them with the entry (schema v4), so
+    calibration trains on the same numbers prediction used."""
 
     shape: tuple[int, ...]
     nnz: int
+    format_stats: FormatStats | None = None
 
     @property
     def ndim(self) -> int:
         return len(self.shape)
 
     @classmethod
-    def from_key(cls, key) -> WorkloadStats:
-        return cls(shape=tuple(key.shape), nnz=int(key.nnz))
+    def from_key(cls, key, format_stats: FormatStats | dict | None = None,
+                 ) -> WorkloadStats:
+        if isinstance(format_stats, dict):
+            format_stats = FormatStats.from_json(format_stats)
+        return cls(shape=tuple(key.shape), nnz=int(key.nnz),
+                   format_stats=format_stats)
+
+
+def _format_stats(st) -> FormatStats:
+    """The `FormatStats` for anything byte_terms accepts: an attached
+    (measured or persisted) instance when present, else the estimate —
+    which is a pure function of (shape, nnz), so prediction and training
+    agree whenever neither side has real counts."""
+    fs = getattr(st, "format_stats", None)
+    if fs is not None:
+        return fs
+    return FormatStats.estimate(tuple(st.shape), int(st.nnz))
 
 
 def byte_terms(name: str, st, rank: int, mode: int,
-               ) -> tuple[float, float, float, float]:
+               ) -> tuple[float, float, float, float, float]:
     """Decompose candidate `name`'s mode-`mode` MTTKRP traffic on `st` into
-    ``(fixed, padded, densified, narrow)`` byte components:
+    ``(fixed, padded, densified, narrow, indexed)`` byte components:
 
     - *fixed* bytes move regardless of chunking (coordinates, values,
       gathers, the output);
@@ -120,10 +158,15 @@ def byte_terms(name: str, st, rank: int, mode: int,
     - *narrow* bytes move through quantized integer paths, already scaled by
       the candidate's preset storage width, and are charged at
       `CostModelPrior.narrow_bandwidth` — this is what lets the prior rank
-      an int8 candidate above an int16 one on a cold start.
+      an int8 candidate above an int16 one on a cold start;
+    - *indexed* bytes are format index structure (CSF fiber tree levels,
+      ALTO key words) whose consumption pays address arithmetic on top of
+      the load, charged at `CostModelPrior.indexed_bandwidth`.
 
     `name` accepts preset candidate ids ("fixed:int3"); `st` is anything
-    with `.shape`, `.nnz`, `.ndim` (a `SparseTensor` or a `WorkloadStats`).
+    with `.shape`, `.nnz`, `.ndim` (a `SparseTensor` or a `WorkloadStats` —
+    the latter may carry measured `FormatStats`; without them the csf/alto
+    models fall back to the balls-in-bins fiber estimate).
     """
     base_name, preset = _split_candidate(name)
     n, d, r = st.nnz, st.ndim, rank
@@ -133,42 +176,65 @@ def byte_terms(name: str, st, rank: int, mode: int,
     gathers = n * (d - 1) * r * _VAL
     base = coords + values + gathers
     if base_name == "ref":
-        return base + 2 * n * r * _VAL + out, 0.0, 0.0, 0.0
+        return base + 2 * n * r * _VAL + out, 0.0, 0.0, 0.0, 0.0
     if base_name == "alto":
-        return (coords + values + 0.75 * gathers + n * r * _VAL + out,
-                0.0, 0.0, 0.0)
+        # One packed key stream replaces the coordinate columns (indexed
+        # traffic: every key byte is de-interleaved); the ALTO order keeps
+        # the 0.75 gather-locality credit, and the sorted segment reduction
+        # writes the accumulator once (1x, vs ref's read-modify-write 2x).
+        # Past the 64-bit key cap the backend falls back to ALTO-*ordered*
+        # COO (see backends._build_alto): explicit coordinate columns move
+        # as plain stream bytes and no key is ever decoded.
+        fs = _format_stats(st)
+        if fs.key_bits > MAX_KEY_BITS:
+            return (coords + values + 0.75 * gathers + n * r * _VAL + out,
+                    0.0, 0.0, 0.0, 0.0)
+        return (values + 0.75 * gathers + n * r * _VAL + out,
+                0.0, 0.0, 0.0, fs.alto_index_bytes())
+    if base_name == "csf":
+        # Fiber reuse: interior gathers + the first reduction level scale
+        # with the fiber count, not nnz — only the innermost factor is
+        # gathered per nonzero.  The tree's index arrays are indexed bytes.
+        fs = _format_stats(st)
+        fibers = fs.fiber_counts[mode]
+        return (values + n * r * _VAL                    # leaf gathers
+                + max(d - 2, 0) * fibers * r * _VAL      # interior gathers
+                + 2 * fibers * r * _VAL + out,           # fiber accumulator
+                0.0, 0.0, 0.0, fs.csf_index_bytes(mode))
     if base_name in ("chunked", "pallas", "distributed"):
-        return out, base + n * r * _VAL, 0.0, 0.0
+        return out, base + n * r * _VAL, 0.0, 0.0, 0.0
     if base_name == "hetero":
-        return out, 0.0, base + n * r * _VAL, 0.0
+        return out, 0.0, base + n * r * _VAL, 0.0, 0.0
     if base_name == "fixed":
         # Quantized traffic scales with the preset width: w-byte factor
         # gathers and accumulator, 16-bit tensor values.  Coordinates and
         # the dequantized f32 output stay full-width.
         w = _preset_width(preset)
         narrow = (w / _VAL) * gathers + n * _QVAL + (w / _VAL) * n * r * _VAL
-        return coords + out, 0.0, 0.0, narrow
+        return coords + out, 0.0, 0.0, narrow, 0.0
     # Unknown (user-registered) backend: assume COO-like traffic so it
     # ranks mid-field and still gets probed under a generous budget.
-    return base + 2 * n * r * _VAL + out, 0.0, 0.0, 0.0
+    return base + 2 * n * r * _VAL + out, 0.0, 0.0, 0.0, 0.0
 
 
 def device_byte_terms(name: str, st, rank: int, mode: int, *,
-                      n_devices: int = 1) -> tuple[float, float, float, float]:
+                      n_devices: int = 1,
+                      ) -> tuple[float, float, float, float, float]:
     """`byte_terms` adjusted for the device count: the distributed backend
     splits its traffic across the real device count and adds an output
     all-reduce (to the fixed component — it is not sharded).  This is the
     single source of the per-observation decomposition: `CostModelPrior
     .seconds` consumes it for prediction and `calibrate._design_terms` for
     the training design matrix, so the two cannot drift apart."""
-    fixed, padded, densified, narrow = byte_terms(name, st, rank, mode)
+    fixed, padded, densified, narrow, indexed = byte_terms(name, st, rank, mode)
     if _split_candidate(name)[0] == "distributed":
         nd = max(1, n_devices)
         fixed = fixed / nd + 2 * st.shape[mode] * rank * _VAL
         padded /= nd
         densified /= nd
         narrow /= nd
-    return fixed, padded, densified, narrow
+        indexed /= nd
+    return fixed, padded, densified, narrow, indexed
 
 
 @dataclasses.dataclass
@@ -189,6 +255,11 @@ class CostModelPrior:
     #: on the bus, but every narrow byte also pays quantize/dequantize
     #: arithmetic, so calibration may learn a value below `bandwidth`.
     narrow_bandwidth: float = 2.0e10
+    #: Effective throughput of format-index traffic (B/s): CSF fiber-tree
+    #: levels and ALTO key words carry address arithmetic (tree walks, bit
+    #: de-interleaves) on every byte, so calibration may learn a value
+    #: below the plain stream bandwidth.
+    indexed_bandwidth: float = 2.0e10
     interpret_penalty: float = 200.0 # pallas interpret-mode slowdown factor
     dispatch_s: float = 1e-4         # per-call jit dispatch overhead
     distributed_dispatch_s: float = 2e-3  # shard_map per-call overhead
@@ -210,22 +281,24 @@ class CostModelPrior:
     def bytes_moved(self, name: str, st, rank: int, mode: int) -> float:
         """Estimated bytes moved by one mode-`mode` MTTKRP for `name`
         (single-device traffic; `seconds` applies the device split)."""
-        fixed, padded, densified, narrow = byte_terms(name, st, rank, mode)
+        fixed, padded, densified, narrow, indexed = byte_terms(
+            name, st, rank, mode)
         return (fixed + self.chunk_padding * padded
                 + self.chunk_padding * self.hetero_overhead * densified
-                + narrow)
+                + narrow + indexed)
 
     def seconds(self, name: str, st, rank: int, mode: int, *,
                 interpret: bool = True, n_devices: int = 1) -> float:
         # device_byte_terms splits distributed traffic across the real
         # device count (a single-device host gets no speedup — the mesh
         # degenerates to one shard) and adds the output all-reduce.
-        fixed, padded, densified, narrow = device_byte_terms(
+        fixed, padded, densified, narrow, indexed = device_byte_terms(
             name, st, rank, mode, n_devices=n_devices)
         t = (fixed + self.chunk_padding * padded
              + self.chunk_padding * self.hetero_overhead * densified
              ) / self.bandwidth
         t += narrow / self.narrow_bandwidth
+        t += indexed / self.indexed_bandwidth
         t += self.dispatch(name)
         if _split_candidate(name)[0] == "pallas" and interpret:
             t *= self.interpret_penalty

@@ -58,9 +58,15 @@ DEFAULT_TTL_ENV = "REPRO_AUTOTUNE_TTL"
 # already written by v1) but marks stores whose entries are TTL-aware and
 # near-match-deduplicated; v1 files load unchanged.  v3 adds the optional
 # `budget` / `errors` fields (accuracy-budgeted format autotuning); v1/v2
-# files load unchanged with budget=None and no recorded errors.
-_SCHEMA_VERSION = 3
-_READABLE_VERSIONS = (1, 2, 3)
+# files load unchanged with budget=None and no recorded errors.  v4 adds the
+# optional `format_stats` field — the measured layout statistics
+# (repro.formats.FormatStats: per-mode fiber counts, interleave key bits) of
+# the tuned tensor, so format candidate ids ("csf"/"alto") round-trip with
+# the numbers their byte models need at calibration time; v1-v3 files load
+# unchanged with format_stats=None (calibration falls back to the
+# balls-in-bins estimate).
+_SCHEMA_VERSION = 4
+_READABLE_VERSIONS = (1, 2, 3, 4)
 
 
 def default_store_path() -> str:
@@ -170,6 +176,12 @@ class StoredEntry:
     relative errors of the lossy candidates that were probed — together they
     let a later lookup decide whether the persisted winners are *valid* for
     its own budget (see `budget_covers`) instead of trusting blindly.
+
+    `format_stats` (schema v4) is the tuned tensor's measured layout
+    statistics as a `repro.formats.FormatStats` JSON dict — fiber counts per
+    mode, interleave key width — recorded whenever the candidate space held
+    a format backend, so the calibration's csf/alto design columns train on
+    the same numbers the live prediction used.
     """
 
     key: WorkloadKey
@@ -182,6 +194,7 @@ class StoredEntry:
     budget: float | None = None            # accuracy budget tuned under
     errors: dict[str, dict[int, float]] = dataclasses.field(
         default_factory=dict)              # candidate -> mode -> rel error
+    format_stats: dict | None = None       # FormatStats.to_json() payload
 
     def to_json(self) -> dict:
         return {
@@ -196,11 +209,13 @@ class StoredEntry:
             "budget": self.budget,
             "errors": {n: {str(m): e for m, e in per.items()}
                        for n, per in self.errors.items()},
+            "format_stats": self.format_stats,
         }
 
     @classmethod
     def from_json(cls, d: dict) -> StoredEntry:
         budget = d.get("budget")
+        fstats = d.get("format_stats")
         return cls(
             key=WorkloadKey.from_json(d["key"]),
             winners={int(m): str(n) for m, n in d["winners"].items()},
@@ -213,6 +228,7 @@ class StoredEntry:
             budget=float(budget) if budget is not None else None,
             errors={n: {int(m): float(e) for m, e in per.items()}
                     for n, per in d.get("errors", {}).items()},
+            format_stats=dict(fstats) if isinstance(fstats, dict) else None,
         )
 
 
@@ -252,13 +268,17 @@ def _drop_shadowed(entries: list[StoredEntry]) -> list[StoredEntry]:
 
 class Observation(NamedTuple):
     """One measured (workload, backend, mode) → seconds data point — the
-    training rows the cost-model calibration fits against."""
+    training rows the cost-model calibration fits against.  `format_stats`
+    carries the entry's persisted layout statistics (schema v4) when
+    present, so the csf/alto design columns train on measured fiber
+    counts."""
 
     key: WorkloadKey
     backend: str
     mode: int
     seconds: float
     created: float
+    format_stats: dict | None = None
 
 
 class TuningStore:
@@ -387,7 +407,8 @@ class TuningStore:
             for backend, per_mode in e.timings.items():
                 for mode, t in per_mode.items():
                     rows.append(Observation(e.key, backend, int(mode),
-                                            float(t), e.created))
+                                            float(t), e.created,
+                                            e.format_stats))
         return rows
 
     def record(self, key: WorkloadKey, winners: dict[int, str],
@@ -395,6 +416,7 @@ class TuningStore:
                overall: str | None = None, warmup: int = 1, reps: int = 2,
                budget: float | None = None,
                errors: dict[str, dict[int, float]] | None = None,
+               format_stats: dict | None = None,
                save: bool = True) -> StoredEntry:
         """Insert the entry for `key`, replacing the exact fingerprint AND
         any near-match it supersedes: without the latter, repeated
@@ -406,7 +428,8 @@ class TuningStore:
                             overall=overall, warmup=warmup, reps=reps,
                             created=time.time(), budget=budget,
                             errors={n: dict(p)
-                                    for n, p in (errors or {}).items()})
+                                    for n, p in (errors or {}).items()},
+                            format_stats=format_stats)
         entries = self._load()
         self._entries = [e for e in entries
                          if e.key != key and not key.matches(e.key)] + [entry]

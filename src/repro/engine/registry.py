@@ -20,6 +20,7 @@ from collections.abc import Callable
 import jax
 
 from ..core.sptensor import SparseTensor
+from ..formats.convert import FormatCache, default_format_cache
 from .plan import PlanCache, default_plan_cache
 
 __all__ = [
@@ -232,6 +233,11 @@ class EngineContext:
     reduce: str = "psum"            # distributed reduction strategy
     interpret: bool = True          # pallas: interpret mode (CPU) vs real TPU
     plans: PlanCache = dataclasses.field(default_factory=lambda: default_plan_cache)
+    #: Sparse-layout cache (repro.formats): CSF trees / ALTO linearization
+    #: built once per tensor and shared across backends and autotune probes,
+    #: exactly as `plans` shares the chunking.
+    formats: FormatCache = dataclasses.field(
+        default_factory=lambda: default_format_cache)
 
     def __post_init__(self):
         # Validate up front: `capacity or plan.capacity` downstream would

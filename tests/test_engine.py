@@ -105,8 +105,11 @@ def test_auto_excludes_lossy_backends_by_default():
 
 def test_registry_capabilities_and_errors():
     specs = registered_backends()
-    assert {"ref", "alto", "chunked", "fixed", "hetero", "pallas",
+    assert {"ref", "alto", "csf", "chunked", "fixed", "hetero", "pallas",
             "distributed"} <= set(specs)
+    # the format backends are lossless, chunk-free, single-device-eligible
+    for fmt in ("csf", "alto"):
+        assert specs[fmt].lossless and not specs[fmt].needs_chunking
     assert specs["fixed"].supports_fixed_point and not specs["fixed"].lossless
     assert specs["distributed"].min_devices == 2
     assert specs["chunked"].needs_chunking and not specs["ref"].needs_chunking
