@@ -1,0 +1,115 @@
+"""Offline design-space sweep CLI (docs/tuning-pipeline.md#sweep).
+
+Fill a tuning store from a declared grid, resumably, and report the Pareto
+front over (wall time, accuracy, index bytes)::
+
+  PYTHONPATH=src python -m benchmarks.sweep \\
+      --config benchmarks/sweep_ci.toml --store sweep-store.json --report
+
+Run it twice against the same store and the second run performs zero
+probes — that is the product: the filled store ships as a CI artifact
+keyed on `--fingerprint`, and a fresh checkout that loads it autotunes
+warm (`--require-warm` gates exactly that).
+
+Exit status: 0 clean; 1 when any cell failed; 3 when `--require-warm` saw
+a probe.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.engine import TuningStore, device_fingerprint_id
+from repro.sweep import load_config, pareto_report, run_sweep
+
+from .common import RESULTS_DIR, save, table
+
+DEFAULT_REPORT = os.path.join(RESULTS_DIR, "sweep_pareto.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--config", default=None,
+                    help="sweep grid, TOML or JSON (see repro.sweep.config)")
+    ap.add_argument("--store", default=None,
+                    help="tuning store to fill (opened with nnz_tol=0: "
+                         "nnz-band cells are distinct design points)")
+    ap.add_argument("--resume", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="skip cells the store already holds (default); "
+                         "--no-resume forgets and re-measures every cell")
+    ap.add_argument("--report", nargs="?", const=DEFAULT_REPORT, default=None,
+                    metavar="PATH",
+                    help="write the Pareto-front JSON (every point carries "
+                         f"time, rel-error, index bytes, peak-fraction); "
+                         f"default path {DEFAULT_REPORT}")
+    ap.add_argument("--require-warm", action="store_true",
+                    help="exit 3 if any probe ran — the fresh-checkout "
+                         "warm-hit gate for a shipped store artifact")
+    ap.add_argument("--max-cells", type=int, default=None,
+                    help="execute at most this many cells this run "
+                         "(resume skips don't count); the rest defer")
+    ap.add_argument("--fingerprint", action="store_true",
+                    help="print this host's device fingerprint id and exit "
+                         "(CI keys the store artifact on it)")
+    args = ap.parse_args(argv)
+
+    if args.fingerprint:
+        print(device_fingerprint_id())
+        return 0
+    if not args.config or not args.store:
+        ap.error("--config and --store are required (unless --fingerprint)")
+
+    cfg = load_config(args.config)
+    store = TuningStore(args.store, nnz_tol=0.0)
+    result = run_sweep(cfg, store, resume=args.resume,
+                       max_cells=args.max_cells, log=print)
+
+    rows = [o.to_json() for o in result.outcomes]
+    for r in rows:
+        r["winners"] = " ".join(f"m{m}={n}"
+                                for m, n in sorted(r["winners"].items()))
+        r["seconds"] = f"{r['seconds']:.2f}"
+    print()
+    print(table(rows, ["cell", "status", "n_probes", "seconds", "winners"]))
+    payload = result.to_json()
+    payload["resume"] = args.resume
+    path = save("sweep", payload)
+    print(f"\nwrote {path}")
+    print(f"store {store.path}: {len(store)} entries, "
+          f"device {device_fingerprint_id()}, "
+          f"{result.n_probes} probes this run")
+
+    if args.report:
+        rep = pareto_report(store)
+        os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
+        with open(args.report, "w") as f:
+            json.dump(rep, f, indent=1, default=float)
+        print(f"wrote {args.report}: {rep['n_points']} points, "
+              f"{rep['n_pareto']} on the Pareto front")
+        front = [{
+            "cell": p["cell"].split("/", 1)[1],  # drop the device id prefix
+            "candidate": p["candidate"],
+            "time_ms": f"{p['time_s'] * 1e3:.2f}",
+            "rel_error": f"{p['rel_error']:.2e}",
+            "index_kib": f"{p['index_bytes'] / 1024:.1f}",
+            "peak": f"{p['peak_fraction']:.1%}",
+        } for p in rep["front"]]
+        print(table(front, ["cell", "candidate", "time_ms", "rel_error",
+                            "index_kib", "peak"]))
+
+    if result.count("failed"):
+        print(f"{result.count('failed')} cell(s) failed", file=sys.stderr)
+        return 1
+    if args.require_warm and result.n_probes > 0:
+        print(f"--require-warm: expected a fully warm store but "
+              f"{result.n_probes} probes ran", file=sys.stderr)
+        return 3
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

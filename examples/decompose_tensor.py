@@ -40,7 +40,7 @@ def main():
     args = ap.parse_args()
 
     if args.list_backends:
-        print(backend_table())
+        print(backend_table(docs_base=None))  # terminal output: no link noise
         return
 
     st = table1_tensor(args.tensor)

@@ -40,6 +40,7 @@ from .persist import (
     WorkloadKey,
     budget_covers,
     device_fingerprint,
+    device_fingerprint_id,
 )
 from .plan import CacheStats, PlanCache, default_plan_cache
 from .registry import (
@@ -85,6 +86,7 @@ __all__ = [
     "default_plan_cache",
     "default_prior",
     "device_fingerprint",
+    "device_fingerprint_id",
     "eligible_backends",
     "get_backend",
     "parse_candidate",

@@ -352,7 +352,13 @@ def autotune_engine(
             "TuningStore/path, or a pre-built CalibratedPrior instance)")
     key = None
     if tuning_store is not None:
-        key = WorkloadKey.from_tensor(ctx.st, ctx.rank, candidates)
+        # An explicitly-pinned chunk capacity is part of the fingerprint
+        # (schema v5): it changes every chunked backend's padding, so
+        # timings tuned under one capacity must not serve another.  The
+        # default (capacity=None, partition decider chooses) matches every
+        # pre-v5 entry, which could only have been tuned that way.
+        key = WorkloadKey.from_tensor(ctx.st, ctx.rank, candidates,
+                                      capacity=ctx.capacity)
         # The budget gates the hit: an entry tuned under a stricter-or-equal
         # budget serves (its winners' measured errors satisfy this request
         # too); anything else is invisible and the workload re-probes.

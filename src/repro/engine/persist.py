@@ -18,8 +18,12 @@ version) always invalidates: timings measured on other silicon are noise.
 
 Default store path: `~/.cache/repro/autotune.json`, overridable with the
 `REPRO_AUTOTUNE_CACHE` environment variable or the `path` argument.  Writes
-are atomic (temp file + rename) so concurrent processes can share a store
-without corrupting it; last writer wins per fingerprint.
+are atomic (temp file + rename) and the read-merge-write cycle in `save()`
+runs under an advisory file lock (`<path>.lock`, flock), so concurrent
+processes — sweep workers filling one store in parallel — never drop each
+other's fresh entries; last writer wins per fingerprint.  On hosts without
+POSIX locks the writer falls back to verify-and-re-merge retries after the
+atomic rename.
 
 Entries can expire: pass `ttl_s=` (or set `REPRO_AUTOTUNE_TTL` seconds) and
 `lookup` ignores entries older than the TTL, so a stale workload re-probes —
@@ -33,6 +37,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import hashlib
 import json
 import os
 import tempfile
@@ -40,6 +45,11 @@ import time
 from typing import NamedTuple
 
 import jax
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover — non-POSIX host
+    fcntl = None
 
 __all__ = [
     "DEFAULT_STORE_ENV",
@@ -50,6 +60,7 @@ __all__ = [
     "WorkloadKey",
     "budget_covers",
     "device_fingerprint",
+    "device_fingerprint_id",
 ]
 
 DEFAULT_STORE_ENV = "REPRO_AUTOTUNE_CACHE"
@@ -64,9 +75,16 @@ DEFAULT_TTL_ENV = "REPRO_AUTOTUNE_TTL"
 # the tuned tensor, so format candidate ids ("csf"/"alto") round-trip with
 # the numbers their byte models need at calibration time; v1-v3 files load
 # unchanged with format_stats=None (calibration falls back to the
-# balls-in-bins estimate).
-_SCHEMA_VERSION = 4
-_READABLE_VERSIONS = (1, 2, 3, 4)
+# balls-in-bins estimate).  v5 adds the optional `capacity` field to the
+# workload KEY — the explicit chunk capacity the workload was tuned under
+# (None: the partition decider's choice) — so the offline sweep's capacity
+# axis fingerprints distinctly instead of colliding with the default-
+# capacity entry; v1-v4 files load unchanged with capacity=None, which is
+# exactly what every pre-v5 writer ran with.  See docs/store-schema.md.
+_SCHEMA_VERSION = 5
+_READABLE_VERSIONS = (1, 2, 3, 4, 5)
+#: Bounded verify-and-re-merge retries for the no-flock save() fallback.
+_SAVE_RETRIES = 5
 
 
 def default_store_path() -> str:
@@ -101,9 +119,27 @@ def device_fingerprint() -> dict[str, str]:
     }
 
 
+def device_fingerprint_id(fp: dict[str, str] | None = None) -> str:
+    """Short stable hex id of a device fingerprint — the key CI uses to name
+    a shipped warm-store artifact, so a downstream job only loads stores
+    measured on matching silicon (benchmarks/sweep.py `--fingerprint`)."""
+    fp = device_fingerprint() if fp is None else fp
+    blob = json.dumps(dict(fp), sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:12]
+
+
 @dataclasses.dataclass(frozen=True)
 class WorkloadKey:
-    """Fingerprint of one (tensor, rank, candidate set, device) workload."""
+    """Fingerprint of one (tensor, rank, candidate set, device) workload.
+
+    `capacity` (schema v5) is the *explicit* chunk capacity the workload was
+    tuned under, None when the partition decider chose (the default path —
+    and the only value pre-v5 stores could have run with, so old entries
+    load compatibly).  An explicitly-pinned capacity changes every chunked
+    backend's padding, so timings measured under one must not serve
+    another — the offline sweep enumerates capacity as a grid axis and
+    relies on the distinct fingerprints.
+    """
 
     shape: tuple[int, ...]
     nnz: int
@@ -112,9 +148,11 @@ class WorkloadKey:
     rank: int
     candidates: tuple[str, ...]
     device: tuple[tuple[str, str], ...]
+    capacity: int | None = None
 
     @classmethod
-    def from_tensor(cls, st, rank: int, candidates) -> WorkloadKey:
+    def from_tensor(cls, st, rank: int, candidates, *,
+                    capacity: int | None = None) -> WorkloadKey:
         return cls(
             shape=tuple(int(d) for d in st.shape),
             nnz=int(st.nnz),
@@ -123,6 +161,7 @@ class WorkloadKey:
             rank=int(rank),
             candidates=tuple(sorted(candidates)),
             device=tuple(sorted(device_fingerprint().items())),
+            capacity=int(capacity) if capacity is not None else None,
         )
 
     def to_json(self) -> dict:
@@ -134,10 +173,12 @@ class WorkloadKey:
             "rank": self.rank,
             "candidates": list(self.candidates),
             "device": {k: v for k, v in self.device},
+            "capacity": self.capacity,
         }
 
     @classmethod
     def from_json(cls, d: dict) -> WorkloadKey:
+        cap = d.get("capacity")
         return cls(
             shape=tuple(int(x) for x in d["shape"]),
             nnz=int(d["nnz"]),
@@ -150,15 +191,19 @@ class WorkloadKey:
             candidates=tuple(sorted(str(c) for c in d["candidates"])),
             device=tuple(sorted((str(k), str(v))
                                 for k, v in d["device"].items())),
+            capacity=int(cap) if cap is not None else None,
         )
 
     def matches(self, other: WorkloadKey, *, nnz_tol: float = 0.1) -> bool:
         """Exact-or-near: everything exact except nnz/density within a
         relative tolerance (the same tensor re-ingested rarely has the
-        byte-identical nonzero count)."""
-        if (self.shape, self.ndim, self.rank, self.candidates, self.device) != (
+        byte-identical nonzero count).  `nnz_tol=0` degrades to exact-stat
+        matching — what the sweep runner uses so adjacent nnz-band cells
+        stay distinct."""
+        if (self.shape, self.ndim, self.rank, self.candidates, self.device,
+                self.capacity) != (
                 other.shape, other.ndim, other.rank, other.candidates,
-                other.device):
+                other.device, other.capacity):
             return False
         if other.nnz == 0 or self.nnz == 0:
             return self.nnz == other.nnz
@@ -254,14 +299,17 @@ def budget_covers(stored: float | None, requested: float | None) -> bool:
     return requested >= stored
 
 
-def _drop_shadowed(entries: list[StoredEntry]) -> list[StoredEntry]:
+def _drop_shadowed(entries: list[StoredEntry], *,
+                   nnz_tol: float = 0.1) -> list[StoredEntry]:
     """Keep only the newest of any near-matching cluster: an entry recorded
     later supersedes older entries its key near-matches (they would only
     shadow each other in `lookup`).  Exact-duplicate keys are expected to be
-    merged by the caller already."""
+    merged by the caller already.  `nnz_tol=0` keeps every distinct
+    fingerprint — the sweep-store policy, where adjacent nnz-band cells are
+    deliberate grid points, not drift."""
     kept: list[StoredEntry] = []
     for e in sorted(entries, key=lambda e: e.created):
-        kept = [k for k in kept if not e.key.matches(k.key)]
+        kept = [k for k in kept if not e.key.matches(k.key, nnz_tol=nnz_tol)]
         kept.append(e)
     return kept
 
@@ -296,14 +344,29 @@ class TuningStore:
     explicit opt-out when the environment sets a TTL.  Entries with no
     recorded timestamp (`created == 0`, from pre-v2 stores) count as stale
     whenever a TTL is in force — unknown age is not trusted age.
+
+    `nnz_tol` is the store's near-match policy (default 0.1): the relative
+    nnz/density drift `lookup` tolerates AND the radius within which
+    `record`/`save` treat entries as superseding each other.  The offline
+    sweep (repro.sweep) opens its store with `nnz_tol=0`: grid cells a few
+    percent apart in nnz are deliberate design points that must neither
+    serve each other warm nor dedup each other away.
     """
 
     def __init__(self, path: str | os.PathLike | None = None, *,
-                 ttl_s: float | None = None):
+                 ttl_s: float | None = None, nnz_tol: float = 0.1):
         self.path = os.fspath(path) if path is not None else default_store_path()
         self.ttl_s = ((ttl_s if ttl_s > 0 else None)
                       if ttl_s is not None else default_ttl_s())
+        if nnz_tol < 0:
+            raise ValueError(f"nnz_tol is a relative drift tolerance and "
+                             f"must be >= 0 (got {nnz_tol})")
+        self.nnz_tol = float(nnz_tol)
         self._entries: list[StoredEntry] | None = None  # lazy-loaded
+        #: Keys `forget()` removed but save() hasn't published yet: the
+        #: read-merge-write in save() would otherwise resurrect them from
+        #: the on-disk copy (merging can only add/update, never delete).
+        self._forgotten: set[WorkloadKey] = set()
 
     def expired(self, entry: StoredEntry, *, now: float | None = None) -> bool:
         if self.ttl_s is None:
@@ -331,15 +394,35 @@ class TuningStore:
             self._entries = self._read_disk()
         return self._entries
 
-    def save(self) -> None:
+    @contextlib.contextmanager
+    def _save_lock(self):
+        """Advisory inter-process lock (`<path>.lock`, flock) serializing
+        the read-merge-write cycle in `save`.  Yields whether the lock was
+        actually taken — False on hosts without POSIX locks, where `save`
+        falls back to verify-and-re-merge retries."""
+        if fcntl is None:  # pragma: no cover — non-POSIX host
+            yield False
+            return
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        with open(self.path + ".lock", "a") as lf:
+            fcntl.flock(lf.fileno(), fcntl.LOCK_EX)
+            try:
+                yield True
+            finally:
+                fcntl.flock(lf.fileno(), fcntl.LOCK_UN)
+
+    def _merge_and_write(self) -> None:
         # Merge with what's on disk right now, not with our lazily-cached
         # snapshot: concurrent processes sharing a store must lose at most
         # a racing write to the *same* fingerprint, never other workloads'
         # entries.  (The rename below is atomic; this read-merge-write makes
         # "last writer wins" hold per fingerprint rather than per file.)
-        by_key = {e.key: e for e in self._read_disk()}
+        by_key = {e.key: e for e in self._read_disk()
+                  if e.key not in self._forgotten}
         by_key.update({e.key: e for e in self._load()})
-        self._entries = _drop_shadowed(list(by_key.values()))
+        self._entries = _drop_shadowed(list(by_key.values()),
+                                       nnz_tol=self.nnz_tol)
         payload = {
             "version": _SCHEMA_VERSION,
             "entries": [e.to_json() for e in self._entries],
@@ -351,10 +434,32 @@ class TuningStore:
             with os.fdopen(fd, "w") as f:
                 json.dump(payload, f, indent=1)
             os.replace(tmp, self.path)  # atomic: concurrent readers see old/new
+            self._forgotten.clear()     # the deletions are published now
         except BaseException:
             with contextlib.suppress(OSError):
                 os.unlink(tmp)
             raise
+
+    def save(self) -> None:
+        """Write the store to disk, merged with concurrent writers' entries.
+
+        The read-merge-write cycle runs under an advisory flock on
+        `<path>.lock`: without it, two writers that both read before either
+        renamed would each publish a payload missing the other's fresh
+        fingerprints — the second rename wins and silently drops the
+        first's work (exactly the concurrent-sweep-worker case).  Where
+        flock is unavailable the writer re-reads after its rename and
+        re-merges until its own entries are all present (bounded retries).
+        """
+        with self._save_lock() as locked:
+            self._merge_and_write()
+        if locked:
+            return
+        for _ in range(_SAVE_RETRIES):  # pragma: no cover — non-POSIX host
+            ours = {e.key for e in self._load()}
+            if ours <= {e.key for e in self._read_disk()}:
+                return
+            self._merge_and_write()
 
     # -- queries -----------------------------------------------------------
     def __len__(self) -> int:
@@ -363,16 +468,18 @@ class TuningStore:
     def entries(self) -> list[StoredEntry]:
         return list(self._load())
 
-    def lookup(self, key: WorkloadKey, *, nnz_tol: float = 0.1,
+    def lookup(self, key: WorkloadKey, *, nnz_tol: float | None = None,
                budget: float | None | object = _ANY_BUDGET,
                ) -> StoredEntry | None:
         """Exact-or-near fingerprint match (see `WorkloadKey.matches`),
         ignoring entries past the store's TTL — stale winners re-probe.
+        `nnz_tol` defaults to the store's policy (`self.nnz_tol`).
 
         `budget` (when given) additionally requires the entry's tuning
         budget to cover the requested one (`budget_covers`): an entry tuned
         under a stricter-or-equal budget serves a looser request, anything
         else is invisible and the workload re-probes."""
+        nnz_tol = self.nnz_tol if nnz_tol is None else nnz_tol
         now = time.time()
         best: StoredEntry | None = None
         best_dist = float("inf")
@@ -419,10 +526,12 @@ class TuningStore:
                format_stats: dict | None = None,
                save: bool = True) -> StoredEntry:
         """Insert the entry for `key`, replacing the exact fingerprint AND
-        any near-match it supersedes: without the latter, repeated
-        decompositions of a slowly drifting tensor (nnz creeping within the
-        ±10% near-match window) accumulate entries that shadow each other in
-        `lookup`, growing the store without bound."""
+        any near-match it supersedes (within the store's `nnz_tol` policy):
+        without the latter, repeated decompositions of a slowly drifting
+        tensor (nnz creeping within the ±10% near-match window) accumulate
+        entries that shadow each other in `lookup`, growing the store
+        without bound.  A `nnz_tol=0` store keeps every distinct
+        fingerprint — sweep grid cells never supersede their neighbours."""
         entry = StoredEntry(key=key, winners=dict(winners),
                             timings={n: dict(p) for n, p in timings.items()},
                             overall=overall, warmup=warmup, reps=reps,
@@ -432,16 +541,39 @@ class TuningStore:
                             format_stats=format_stats)
         entries = self._load()
         self._entries = [e for e in entries
-                         if e.key != key and not key.matches(e.key)] + [entry]
+                         if e.key != key
+                         and not key.matches(e.key, nnz_tol=self.nnz_tol)
+                         ] + [entry]
         if save:
             self.save()
         return entry
 
+    def forget(self, key: WorkloadKey, *, save: bool = True) -> bool:
+        """Drop the exact-fingerprint entry for `key`, if present.  The
+        sweep runner's re-measure path (`resume=False`) forgets each cell
+        before probing so the fresh measurement is recorded as a cold start
+        instead of being served warm from the stale entry.
+
+        The removal is remembered until the next successful `save()`:
+        save's read-merge-write would otherwise resurrect the entry from
+        the on-disk copy (merging can only add/update)."""
+        entries = self._load()
+        kept = [e for e in entries if e.key != key]
+        if len(kept) == len(entries):
+            return False
+        self._entries = kept
+        self._forgotten.add(key)
+        if save:
+            self.save()
+        return True
+
     def clear(self) -> None:
-        """Drop all entries and delete the backing file."""
+        """Drop all entries and delete the backing file (and its lock)."""
         self._entries = []
         with contextlib.suppress(FileNotFoundError):
             os.unlink(self.path)
+        with contextlib.suppress(FileNotFoundError):
+            os.unlink(self.path + ".lock")
 
     def __repr__(self) -> str:
         return f"TuningStore({self.path!r}, entries={len(self)})"

@@ -190,16 +190,27 @@ def eligible_backends(
     ]
 
 
-def backend_table() -> str:
-    """Markdown capability table (used by the README and `--help` text)."""
+def backend_table(docs_base: str | None = "docs/candidates.md") -> str:
+    """Markdown capability table (used by the README and `--help` text).
+
+    Each backend row cites its section of the candidate-id documentation
+    (`docs_base` anchors, e.g. ``docs/candidates.md#csf``), and each preset
+    its entry under the preset grammar; pass ``docs_base=None`` for plain
+    terminal output without link noise."""
+    def _name(n: str) -> str:
+        return f"[`{n}`]({docs_base}#{n})" if docs_base else f"`{n}`"
+
+    def _preset(p: str) -> str:
+        return (f"[`{p}`]({docs_base}#preset-{p})" if docs_base else f"`{p}`")
+
     rows = [
         "| backend | chunked | fixed-point | lossless | presets | min devices | description |",
         "|---------|---------|-------------|----------|---------|-------------|-------------|",
     ]
     for s in _REGISTRY.values():
-        presets = " ".join(f"`{p}`" for p in s.presets) if s.presets else "—"
+        presets = " ".join(_preset(p) for p in s.presets) if s.presets else "—"
         rows.append(
-            f"| `{s.name}` | {'✓' if s.needs_chunking else '—'} "
+            f"| {_name(s.name)} | {'✓' if s.needs_chunking else '—'} "
             f"| {'✓' if s.supports_fixed_point else '—'} "
             f"| {'✓' if s.lossless else '—'} "
             f"| {presets} "

@@ -148,14 +148,19 @@ def registered_formats() -> dict[str, FormatSpec]:
     return dict(_REGISTRY)
 
 
-def format_table() -> str:
-    """Markdown capability table (README / `--help` text)."""
+def format_table(docs_base: str | None = "docs/candidates.md") -> str:
+    """Markdown capability table (README / `--help` text).  Each layout row
+    cites its candidate documentation anchor (the format registry names
+    double as autotune candidate ids); `docs_base=None` for plain text."""
+    def _name(n: str) -> str:
+        return f"[`{n}`]({docs_base}#{n})" if docs_base else f"`{n}`"
+
     rows = [
         "| format | mode-agnostic | sorted reduce | description |",
         "|--------|---------------|---------------|-------------|",
     ]
     rows.extend(
-        f"| `{s.name}` | {'✓' if s.mode_agnostic else '—'} "
+        f"| {_name(s.name)} | {'✓' if s.mode_agnostic else '—'} "
         f"| {'✓' if s.sorted_reduce else '—'} "
         f"| {s.description} |"
         for s in _REGISTRY.values()

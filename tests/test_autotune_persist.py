@@ -201,6 +201,97 @@ def test_concurrent_saves_merge_per_fingerprint(tmp_path):
     assert len(fresh) == 2
 
 
+def test_racing_writers_under_widened_window_drop_nothing(tmp_path, monkeypatch):
+    """Regression: save()'s read-merge-write used to run unlocked, so two
+    writers that both read the file before either renamed would each
+    publish a payload missing the other's fresh entry — the second rename
+    silently dropped the first's work.  The advisory flock serializes the
+    cycle; this test widens the read→rename window enough that the
+    unlocked code loses deterministically."""
+    import threading
+    import time as _time
+
+    st_a = random_tensor((20, 16, 24), 400, seed=1)
+    st_b = random_tensor((40, 32, 12), 900, seed=2)
+    path = tmp_path / "autotune.json"
+    real_read = TuningStore._read_disk
+
+    def slow_read(self):
+        entries = real_read(self)
+        _time.sleep(0.15)           # hold the stale snapshot a while
+        return entries
+
+    monkeypatch.setattr(TuningStore, "_read_disk", slow_read)
+    a, b = TuningStore(path), TuningStore(path)
+    ka, kb = _key(st_a), _key(st_b)
+    threads = [
+        threading.Thread(
+            target=lambda: a.record(ka, {0: "ref"}, {"ref": {0: 1.0}})),
+        threading.Thread(
+            target=lambda: b.record(kb, {0: "alto"}, {"alto": {0: 2.0}})),
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    monkeypatch.setattr(TuningStore, "_read_disk", real_read)
+    fresh = TuningStore(path)
+    assert fresh.lookup(ka) is not None
+    assert fresh.lookup(kb) is not None
+    assert len(fresh) == 2
+
+
+def test_nnz_tol_zero_store_keeps_adjacent_fingerprints(tmp_path):
+    """A sweep store (nnz_tol=0) must treat nnz-band neighbours inside the
+    default ±10% window as distinct: no warm-serving, no record()-time
+    supersede, no save()-time shadow dedup."""
+    st = random_tensor((30, 24, 36), 700, seed=2)
+    near = random_tensor((30, 24, 36), 730, seed=7)   # within 10%
+    path = tmp_path / "autotune.json"
+    exact = TuningStore(path, nnz_tol=0.0)
+    exact.record(_key(st), {0: "ref"}, {"ref": {0: 1.0}})
+    assert exact.lookup(_key(near)) is None           # no near hit
+    exact.record(_key(near), {0: "alto"}, {"alto": {0: 2.0}})
+    assert len(TuningStore(path, nnz_tol=0.0)) == 2   # both survive the save
+    assert exact.lookup(_key(st)).winners == {0: "ref"}
+    assert exact.lookup(_key(near)).winners == {0: "alto"}
+    # the same file read under the default policy near-matches again
+    assert TuningStore(path).lookup(_key(near)) is not None
+    with pytest.raises(ValueError, match="nnz_tol"):
+        TuningStore(path, nnz_tol=-0.1)
+
+
+def test_forget_drops_exactly_one_fingerprint(tmp_path):
+    st_a = random_tensor((20, 16, 24), 400, seed=1)
+    st_b = random_tensor((40, 32, 12), 900, seed=2)
+    path = tmp_path / "autotune.json"
+    store = TuningStore(path)
+    store.record(_key(st_a), {0: "ref"}, {"ref": {0: 1.0}})
+    store.record(_key(st_b), {0: "alto"}, {"alto": {0: 2.0}})
+    assert store.forget(_key(st_a)) is True
+    assert store.forget(_key(st_a)) is False          # already gone
+    fresh = TuningStore(path)
+    assert fresh.lookup(_key(st_a)) is None
+    assert fresh.lookup(_key(st_b)) is not None
+
+
+def test_capacity_is_part_of_the_fingerprint(tmp_path):
+    """Schema v5: timings tuned under an explicitly-pinned chunk capacity
+    must not serve the decider-default workload (or another capacity) —
+    and pre-v5 entries (capacity absent in JSON) load as None."""
+    st = random_tensor((20, 16, 24), 400, seed=1)
+    store = TuningStore(tmp_path / "autotune.json")
+    pinned = WorkloadKey.from_tensor(st, 4, ("ref",), capacity=64)
+    store.record(pinned, {0: "ref"}, {"ref": {0: 1.0}})
+    assert store.lookup(pinned) is not None
+    assert store.lookup(WorkloadKey.from_tensor(st, 4, ("ref",))) is None
+    assert store.lookup(dataclasses.replace(pinned, capacity=32)) is None
+    # JSON round-trip without the field (a v4-era entry) → capacity=None
+    d = pinned.to_json()
+    del d["capacity"]
+    assert WorkloadKey.from_json(d).capacity is None
+
+
 def test_unbuildable_persisted_winner_falls_back_to_measurement(tmp_path):
     st = random_tensor((20, 16, 24), 400, seed=4)
     store = TuningStore(tmp_path / "autotune.json")
@@ -237,7 +328,8 @@ def test_max_probes_prunes_to_prior_topk(monkeypatch):
     eng = build_engine(st, "auto", 4, plans=PlanCache(), candidates=cands,
                        max_probes=2, **KW)
     rep = eng.report
-    assert rep.prior_order is not None and rep.prior_order[:2] == top2
+    assert rep.prior_order is not None
+    assert rep.prior_order[:2] == top2
     assert set(rep.timings) <= set(top2)
     pruned = {n for n, why in rep.skipped.items() if "pruned" in why}
     assert pruned == set(cands) - set(top2)

@@ -126,5 +126,8 @@ def test_train_step_runs_sharded_and_checkpoint_roundtrip(tmp_path):
         print(json.dumps([float(l0), float(l1), bool(same), st]))
     """))
     l0, l1, same, st = json.loads(out.strip().splitlines()[-1])
-    assert np.isfinite(l0) and np.isfinite(l1) and l1 < l0
-    assert same and st == 2
+    assert np.isfinite(l0)
+    assert np.isfinite(l1)
+    assert l1 < l0
+    assert same
+    assert st == 2

@@ -62,6 +62,7 @@ def test_elastic_restore_across_device_counts(tmp_path):
         print(json.dumps(float(loss)))
     """), n=4)
     loss4 = json.loads(out2.strip().splitlines()[-1])
-    assert np.isfinite(loss8) and np.isfinite(loss4)
+    assert np.isfinite(loss8)
+    assert np.isfinite(loss4)
     # training continued from the restored state → loss keeps decreasing
     assert loss4 < loss8 + 0.05

@@ -46,7 +46,7 @@ def _factors(shape, rank, seed=2):
 
 
 @pytest.mark.parametrize("name", sorted(registered_backends()))
-@pytest.mark.parametrize("shape,nnz,cs,cap", CASES)
+@pytest.mark.parametrize(("shape", "nnz", "cs", "cap"), CASES)
 def test_backend_matches_coo_oracle(name, shape, nnz, cs, cap):
     st = random_tensor(shape, nnz, seed=1)
     rank = 6
@@ -109,10 +109,13 @@ def test_registry_capabilities_and_errors():
             "distributed"} <= set(specs)
     # the format backends are lossless, chunk-free, single-device-eligible
     for fmt in ("csf", "alto"):
-        assert specs[fmt].lossless and not specs[fmt].needs_chunking
-    assert specs["fixed"].supports_fixed_point and not specs["fixed"].lossless
+        assert specs[fmt].lossless
+        assert not specs[fmt].needs_chunking
+    assert specs["fixed"].supports_fixed_point
+    assert not specs["fixed"].lossless
     assert specs["distributed"].min_devices == 2
-    assert specs["chunked"].needs_chunking and not specs["ref"].needs_chunking
+    assert specs["chunked"].needs_chunking
+    assert not specs["ref"].needs_chunking
     with pytest.raises(ValueError, match="unknown engine"):
         get_backend("nonexistent")
     # single-device process: distributed must not be autotune-eligible

@@ -87,7 +87,8 @@ def test_explicit_preset_candidate_builds_that_preset():
 def test_backend_table_lists_presets():
     table = backend_table()
     assert "presets" in table.splitlines()[0]
-    assert "`int7`" in table and "`int15-12`" in table
+    assert "`int7`" in table
+    assert "`int15-12`" in table
 
 
 # ---------------------------------------------------------------------------
@@ -179,7 +180,8 @@ def test_quant_error_measured_on_lossy_mode_without_budget(monkeypatch):
     assert rep.winners[st.ndim - 1] == "chunked"
     assert rep.errors == {}                      # no budget, none recorded
     # int7 quantization noise is ~1e-2; float reduction noise is ~1e-7
-    assert res.quant_error is not None and res.quant_error > 1e-4
+    assert res.quant_error is not None
+    assert res.quant_error > 1e-4
 
 
 def test_conflicting_preset_spellings_rejected():
@@ -278,14 +280,16 @@ def test_warm_hits_gated_by_budget(tmp_path, monkeypatch):
     same = build_engine(st, "auto", 4, plans=PlanCache(),
                         store=TuningStore(path), accuracy_budget=0.5,
                         candidates=FMT_CANDS, **KW)
-    assert calls == [] and same.report.source == "persisted"
+    assert calls == []
+    assert same.report.source == "persisted"
     assert same.report.winners == cold.report.winners
     assert same.report.errors == cold.report.errors
 
     looser = build_engine(st, "auto", 4, plans=PlanCache(),
                           store=TuningStore(path), accuracy_budget=0.9,
                           candidates=FMT_CANDS, **KW)
-    assert calls == [] and looser.report.source == "persisted"
+    assert calls == []
+    assert looser.report.source == "persisted"
 
     stricter = build_engine(st, "auto", 4, plans=PlanCache(),
                             store=TuningStore(path), accuracy_budget=1e-9,

@@ -59,7 +59,8 @@ def _assert_same_tensor(a: SparseTensor, b: SparseTensor):
     """Conversion invariant: the (coords, values) multiset — and therefore
     the dense tensor — survives exactly (coords are unique post-_dedup, so
     set equality is multiset equality)."""
-    assert a.shape == b.shape and a.nnz == b.nnz
+    assert a.shape == b.shape
+    assert a.nnz == b.nnz
     assert _coord_set(a) == _coord_set(b)
     np.testing.assert_array_equal(a.to_dense(), b.to_dense())
 
@@ -77,13 +78,16 @@ def _factors(shape, rank, seed=2):
 def test_format_registry_capabilities_and_errors():
     specs = registered_formats()
     assert {"coo", "csf", "alto"} <= set(specs)
-    assert specs["alto"].mode_agnostic and specs["coo"].mode_agnostic
+    assert specs["alto"].mode_agnostic
+    assert specs["coo"].mode_agnostic
     assert not specs["csf"].mode_agnostic      # one tree per output mode
     assert specs["csf"].sorted_reduce
     with pytest.raises(ValueError, match="unknown format"):
         get_format("nonexistent")
     table = format_table()
-    assert "`csf`" in table and "`alto`" in table and "`coo`" in table
+    assert "`csf`" in table
+    assert "`alto`" in table
+    assert "`coo`" in table
 
 
 def test_register_format_decorator_roundtrip():
@@ -157,7 +161,7 @@ def test_format_kernels_match_coo_oracle(dims, nnz, seed):
                                    rtol=1e-4, atol=1e-5)
 
 
-@pytest.mark.parametrize("shape,nnz", [
+@pytest.mark.parametrize(("shape", "nnz"), [
     ((4, 5, 6), 0),        # empty tensor
     ((4, 5, 6), 1),        # single nonzero
     ((5, 1, 7), 20),       # a mode of size 1
@@ -213,7 +217,8 @@ def test_alto_positions_adaptive_and_exclusive():
     assert len(flat) == len(set(flat)) == alto_key_bits(shape) == 45
     assert max(flat) == 44              # densely packed
     # short modes drop out of the rotation early (adaptive interleave)
-    assert len(pos[3]) == 8 and len(pos[1]) == 15
+    assert len(pos[3]) == 8
+    assert len(pos[1]) == 15
 
 
 def test_alto_key_width_guard():
@@ -244,7 +249,8 @@ def test_format_cache_builds_each_layout_once():
     d0 = fc.device_csf(st, 0)
     assert fc.device_csf(st, 0) is d0
     assert fc.device_alto(st) is fc.device_alto(st)
-    assert fc.stats.csf_misses == 2 and fc.stats.csf_hits >= 2
+    assert fc.stats.csf_misses == 2
+    assert fc.stats.csf_hits >= 2
     assert fc.stats.alto_misses == 1
     s = fc.format_stats(st)
     assert fc.format_stats(st) is s
@@ -291,7 +297,8 @@ def test_autotune_widened_space_persists_and_serves_warm(tmp_path):
                         store=TuningStore(path))
     rep = cold.report
     assert {"csf", "alto"} <= set(rep.candidates)
-    assert rep.source == "measured" and rep.n_probes > 0
+    assert rep.source == "measured"
+    assert rep.n_probes > 0
     assert set(rep.winners) == {0, 1, 2}
     assert set(rep.winners.values()) <= set(registered_backends())
 
@@ -301,11 +308,13 @@ def test_autotune_widened_space_persists_and_serves_warm(tmp_path):
     assert {"csf", "alto"} <= set(entry.key.candidates)
     assert entry.format_stats is not None
     stats = FormatStats.from_json(entry.format_stats)
-    assert stats.measured and len(stats.fiber_counts) == st.ndim
+    assert stats.measured
+    assert len(stats.fiber_counts) == st.ndim
 
     warm = build_engine(st, "auto", 5, plans=PlanCache(), formats=fc,
                         store=TuningStore(path))
-    assert warm.report.source == "persisted" and warm.report.n_probes == 0
+    assert warm.report.source == "persisted"
+    assert warm.report.n_probes == 0
     assert warm.report.winners == rep.winners
     # the warm engine still matches the oracle
     factors = _factors(st.shape, 5)
@@ -362,7 +371,8 @@ def test_format_stats_measured_vs_estimate():
     st = table1_tensor("nell2", nnz=4000)
     measured = FormatStats.from_tensor(st)
     est = FormatStats.estimate(st.shape, st.nnz)
-    assert measured.measured and not est.measured
+    assert measured.measured
+    assert not est.measured
     assert measured.key_bits == est.key_bits
     assert all(0 < f <= st.nnz for f in measured.fiber_counts)
     # uniform draws: the balls-in-bins estimate lands near the real count
@@ -374,7 +384,8 @@ def test_format_stats_measured_vs_estimate():
 
 def test_format_stats_estimate_edges():
     est = FormatStats.estimate((5, 4, 3), 0)
-    assert est.fiber_counts == (0, 0, 0) and est.nnz == 0
+    assert est.fiber_counts == (0, 0, 0)
+    assert est.nnz == 0
     one = FormatStats.estimate((1, 1, 1), 1)
     assert one.fiber_counts == (1, 1, 1)
     big = FormatStats.estimate((10**6, 10**6, 10**6), 1000)
@@ -385,7 +396,8 @@ def test_byte_terms_have_indexed_component_for_formats():
     st = random_tensor((40, 32, 24), 2000, seed=9)
     for name in ("csf", "alto"):
         terms = byte_terms(name, st, 8, 0)
-        assert len(terms) == 5 and terms[4] > 0.0, (name, terms)
+        assert len(terms) == 5, (name, terms)
+        assert terms[4] > 0.0, (name, terms)
     for name in ("ref", "chunked", "hetero", "fixed", "fixed:int3"):
         assert byte_terms(name, st, 8, 0)[4] == 0.0
     # measured stats flow through a WorkloadStats wrapper

@@ -37,7 +37,7 @@ def _setup(shape, nnz, cs, cap, rank, seed=0):
     return st_, factors, ct
 
 
-@pytest.mark.parametrize("shape,nnz,cs,cap,rank", SWEEP)
+@pytest.mark.parametrize(("shape", "nnz", "cs", "cap", "rank"), SWEEP)
 def test_float_kernel_local_vs_oracle(shape, nnz, cs, cap, rank):
     st_, factors, ct = _setup(shape, nnz, cs, cap, rank)
     from repro.kernels.ops import pad_factor
@@ -53,8 +53,8 @@ def test_float_kernel_local_vs_oracle(shape, nnz, cs, cap, rank):
         np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
-@pytest.mark.parametrize("shape,nnz,cs,cap,rank", SWEEP[:3])
-@pytest.mark.parametrize("qf,prec_shift", [(Q9_7, 0), (Q17_15, 3)])
+@pytest.mark.parametrize(("shape", "nnz", "cs", "cap", "rank"), SWEEP[:3])
+@pytest.mark.parametrize(("qf", "prec_shift"), [(Q9_7, 0), (Q17_15, 3)])
 def test_fixed_kernel_bit_exact_vs_oracle(shape, nnz, cs, cap, rank, qf,
                                           prec_shift):
     st_, factors, ct = _setup(shape, nnz, cs, cap, rank, seed=2)
@@ -77,7 +77,7 @@ def test_fixed_kernel_bit_exact_vs_oracle(shape, nnz, cs, cap, rank, qf,
         assert bool(jnp.all(got == want)), f"mode {mode}"
 
 
-@pytest.mark.parametrize("shape,nnz,cs,cap,rank", SWEEP[:2])
+@pytest.mark.parametrize(("shape", "nnz", "cs", "cap", "rank"), SWEEP[:2])
 def test_full_pallas_op_vs_coo(shape, nnz, cs, cap, rank):
     st_, factors, ct = _setup(shape, nnz, cs, cap, rank, seed=3)
     for mode in range(len(shape)):

@@ -75,4 +75,5 @@ def test_manual_sp_falls_back_when_not_applicable():
         print(json.dumps([float(l), bool(jnp.all(jnp.isfinite(lg)))]))
     """))
     l, ok = json.loads(out.strip().splitlines()[-1])
-    assert np.isfinite(l) and ok
+    assert np.isfinite(l)
+    assert ok

@@ -28,7 +28,7 @@ def _factors(shape, rank, seed=2):
                  for d in shape)
 
 
-@pytest.mark.parametrize("shape,nnz,cs,cap", CASES)
+@pytest.mark.parametrize(("shape", "nnz", "cs", "cap"), CASES)
 def test_chunked_matches_coo_all_modes(shape, nnz, cs, cap):
     st = random_tensor(shape, nnz, seed=1)
     rank = 8
@@ -45,8 +45,8 @@ def test_chunked_matches_coo_all_modes(shape, nnz, cs, cap):
         np.testing.assert_allclose(ref, out, rtol=1e-4, atol=1e-4)
 
 
-@pytest.mark.parametrize("qf,prec_shift", [(Q9_7, 0), (Q17_15, 3)])
-@pytest.mark.parametrize("shape,nnz,cs,cap", CASES[:3])
+@pytest.mark.parametrize(("qf", "prec_shift"), [(Q9_7, 0), (Q17_15, 3)])
+@pytest.mark.parametrize(("shape", "nnz", "cs", "cap"), CASES[:3])
 def test_fixed_chunked_bit_exact(shape, nnz, cs, cap, qf, prec_shift):
     st = random_tensor(shape, nnz, seed=3)
     rank = 6

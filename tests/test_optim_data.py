@@ -136,7 +136,8 @@ def test_arch_batches_match_model_inputs():
         cfg = get_smoke_config(arch)
         b = SyntheticBatches(cfg, seq_len=32, global_batch=4).batch(0)
         if cfg.encoder_decoder:
-            assert "frames" in b and b["frames"].shape[0] == 4
+            assert "frames" in b
+            assert b["frames"].shape[0] == 4
         if cfg.n_image_tokens:
             assert b["image_embeds"].shape[1] == cfg.n_image_tokens
         assert b["tokens"].dtype == np.int32

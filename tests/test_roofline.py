@@ -23,8 +23,10 @@ def test_parse_collectives_ops_and_groups():
     recs = parse_collectives(HLO)
     ops = [r["op"] for r in recs]
     assert ops.count("all-gather") == 2  # incl. -start; -done skipped
-    assert "all-reduce" in ops and "reduce-scatter" in ops
-    assert "all-to-all" in ops and "collective-permute" in ops
+    assert "all-reduce" in ops
+    assert "reduce-scatter" in ops
+    assert "all-to-all" in ops
+    assert "collective-permute" in ops
     by_op = {}
     for r in recs:  # keep FIRST record per op (the -start dup comes later)
         by_op.setdefault(r["op"], r)

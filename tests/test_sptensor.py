@@ -76,7 +76,7 @@ def test_permuted_accepts_real_permutation():
     np.testing.assert_array_equal(pt.to_dense(), st.to_dense())
 
 
-@pytest.mark.parametrize("bad,why", [
+@pytest.mark.parametrize(("bad", "why"), [
     (np.arange(59), "wrong length (short)"),
     (np.arange(61), "wrong length (long)"),
     (np.zeros(60, dtype=np.int64), "repeated index"),

@@ -1,0 +1,370 @@
+"""Offline design-space sweep harness: config parsing + validation (incl.
+the TOML-subset fallback parser), fingerprint-native resumability (zero
+re-probes after a restart, kill-mid-grid equivalence), the Pareto report's
+required axes, and the capacity-axis fingerprint distinctness the schema-v5
+workload key exists for."""
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import random_tensor
+from repro.engine import TuningStore, WorkloadKey
+from repro.engine import autotune as _autotune
+from repro.sweep import (
+    SweepConfig,
+    SweepConfigError,
+    TensorBand,
+    cell_key,
+    load_config,
+    pareto_front,
+    pareto_report,
+    run_sweep,
+)
+from repro.sweep.config import _toml_subset_loads
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+CI_GRID = os.path.join(ROOT, "benchmarks", "sweep_ci.toml")
+
+#: Cheap lossless candidates — sweep tests exercise the harness, not the
+#: backends.
+CANDS = ("chunked", "ref")
+
+
+def _band(**over):
+    base = dict(name="u", shape=(12, 10, 8), nnz=(150, 200),
+                distribution="uniform", seed=0)
+    base.update(over)
+    return TensorBand(**base)
+
+
+def _config(**over):
+    base = dict(name="t", tensors=(_band(),), ranks=(3,), candidates=CANDS,
+                capacities=(None,), mem_bytes=64 * 1024, warmup=0, reps=1)
+    base.update(over)
+    return SweepConfig(**base)
+
+
+def _fake_timer(monkeypatch, calls=None):
+    """Deterministic per-(candidate, mode) probe timings through the
+    `_time_backend` seam: restarted / re-ordered sweeps must reproduce the
+    exact same stored numbers, which is what makes Pareto-set equality
+    across interruption meaningful (and the tests fast)."""
+    def fake(name, engine, factors, mode, *, warmup, reps):
+        if calls is not None:
+            calls.append((name, mode))
+        return 1e-3 * (1 + sum(map(ord, name)) % 7) + 2e-4 * mode
+    monkeypatch.setattr(_autotune, "_time_backend", fake)
+
+
+# ---------------------------------------------------------------------------
+# Config schema + TOML-subset parser
+# ---------------------------------------------------------------------------
+
+def test_config_validation_rejects_unusable_grids():
+    with pytest.raises(SweepConfigError, match="no tensor bands"):
+        _config(tensors=())
+    with pytest.raises(SweepConfigError, match="ranks must be positive"):
+        _config(ranks=(0,))
+    with pytest.raises(SweepConfigError, match="bad candidate id"):
+        _config(candidates=("no_such_backend",))
+    with pytest.raises(SweepConfigError, match="accuracy_budget"):
+        _config(candidates=("ref", "fixed:int7"))  # lossy without a budget
+    with pytest.raises(SweepConfigError, match="capacity"):
+        _config(capacities=(-3,))
+    with pytest.raises(SweepConfigError, match="distribution"):
+        _band(distribution="gaussian")
+    with pytest.raises(SweepConfigError, match="nnz band must be positive"):
+        _band(nnz=())
+
+
+def test_from_dict_maps_sentinels_and_scalars():
+    cfg = SweepConfig.from_dict({"sweep": {
+        "name": "d",
+        "ranks": [4],
+        "capacities": [0, 32],         # TOML has no null: 0 → decider
+        "candidates": ["ref"],
+        "tensors": [{"name": "b", "shape": [8, 6, 4], "nnz": 50}],
+    }})
+    assert cfg.capacities == (None, 32)
+    assert cfg.tensors[0].nnz == (50,)   # scalar nnz becomes a 1-band
+    assert [c.label for c in cfg.cells()] == [
+        "b/nnz=50/rank=4/cap=auto", "b/nnz=50/rank=4/cap=32"]
+
+
+def test_toml_subset_parser_covers_the_schema():
+    parsed = _toml_subset_loads(
+        '# header comment\n'
+        '[sweep]\n'
+        'name = "g"  # trailing comment\n'
+        'ranks = [4, 8]\n'
+        'accuracy_budget = 0.2\n'
+        'flag = true\n'
+        'candidates = ["ref", "fixed:int7"]\n'
+        '\n'
+        '[[sweep.tensors]]\n'
+        'name = "a"\n'
+        'shape = [8, 6, 4]\n'
+        'nnz = 50\n'
+        '[[sweep.tensors]]\n'
+        'name = "b # not a comment"\n'
+        'shape = [10, 10, 10]\n'
+        'nnz = [60, 70]\n')
+    assert parsed["sweep"]["name"] == "g"
+    assert parsed["sweep"]["ranks"] == [4, 8]
+    assert parsed["sweep"]["accuracy_budget"] == 0.2
+    assert parsed["sweep"]["flag"] is True
+    assert parsed["sweep"]["candidates"] == ["ref", "fixed:int7"]
+    assert [t["name"] for t in parsed["sweep"]["tensors"]] == [
+        "a", "b # not a comment"]
+    assert parsed["sweep"]["tensors"][1]["nnz"] == [60, 70]
+    with pytest.raises(SweepConfigError, match="unsupported value"):
+        _toml_subset_loads("x = 1979-05-27\n")
+    with pytest.raises(SweepConfigError, match="key = value"):
+        _toml_subset_loads("just words\n")
+
+
+def test_shipped_ci_grid_loads_and_enumerates():
+    """The pruned grid CI actually runs must stay parseable by the subset
+    parser (not just tomllib) and declare a budget for its lossy row."""
+    cfg = load_config(CI_GRID)
+    assert cfg.name == "ci-pruned"
+    assert len(cfg.cells()) == 6
+    assert "fixed:int7" in cfg.candidates
+    assert cfg.accuracy_budget == 0.2
+    assert cfg.capacities == (None, 64)
+    with open(CI_GRID, encoding="utf-8") as f:
+        subset = SweepConfig.from_dict(_toml_subset_loads(f.read()))
+    assert subset == cfg or subset.cells() == cfg.cells()
+
+
+def test_toml_subset_agrees_with_tomllib_when_available():
+    tomllib = pytest.importorskip("tomllib")
+    with open(CI_GRID, "rb") as f:
+        reference = tomllib.load(f)
+    with open(CI_GRID, encoding="utf-8") as f:
+        assert _toml_subset_loads(f.read()) == reference
+
+
+# ---------------------------------------------------------------------------
+# Fingerprint-native resumability
+# ---------------------------------------------------------------------------
+
+def test_cell_key_matches_live_autotune_fingerprint():
+    """`cell_key` computes the workload fingerprint WITHOUT building the
+    tensor; it must stay field-for-field identical to what the autotuner
+    fingerprints after the build, or resume silently re-probes forever."""
+    cfg = _config(capacities=(16,))
+    cell = cfg.cells()[0]
+    st = random_tensor(cell.band.shape, cell.nnz,
+                       distribution=cell.band.distribution,
+                       seed=cell.band.seed)
+    live = WorkloadKey.from_tensor(st, cell.rank, cfg.candidates,
+                                   capacity=cell.capacity)
+    assert cell_key(cell, cfg) == live
+
+
+def test_sweep_resumes_with_zero_probes(tmp_path, monkeypatch):
+    """Acceptance: the same sweep twice against one store — the second run
+    performs zero probes and reports every cell complete.  The nnz band
+    (150 vs 200) sits outside no near-match window only because the sweep
+    store runs nnz_tol=0."""
+    calls = []
+    _fake_timer(monkeypatch, calls)
+    cfg = _config()
+    store = TuningStore(tmp_path / "sweep.json", nnz_tol=0.0)
+    first = run_sweep(cfg, store)
+    assert first.count("measured") == 2
+    assert first.n_probes == len(calls)
+    assert first.n_probes > 0
+
+    calls.clear()
+    second = run_sweep(cfg, store)
+    assert calls == []
+    assert second.n_probes == 0
+    assert second.count("complete") == 2
+    assert len(TuningStore(tmp_path / "sweep.json", nnz_tol=0.0)) == 2
+    # and the winners the resume path reports match what was measured
+    assert ([o.winners for o in second.outcomes]
+            == [o.winners for o in first.outcomes])
+
+
+def test_adjacent_nnz_band_cells_stay_distinct(tmp_path, monkeypatch):
+    """Cells 150 and 160 nnz apart sit inside the default ±10% near-match
+    window; the sweep store's nnz_tol=0 must keep both as separate entries
+    instead of letting them warm-serve / supersede each other."""
+    _fake_timer(monkeypatch)
+    cfg = _config(tensors=(_band(nnz=(150, 160)),))
+    store = TuningStore(tmp_path / "sweep.json", nnz_tol=0.0)
+    result = run_sweep(cfg, store)
+    assert result.count("measured") == 2
+    assert len(store) == 2
+    again = run_sweep(cfg, store)
+    assert again.n_probes == 0
+    assert again.count("complete") == 2
+
+
+def test_sweep_rejects_near_match_store(tmp_path):
+    with pytest.raises(ValueError, match="nnz_tol=0"):
+        run_sweep(_config(), TuningStore(tmp_path / "s.json"))  # default 0.1
+
+
+def test_interrupted_sweep_restart_skips_completed_cells_and_matches_pareto(
+        tmp_path, monkeypatch):
+    """Satellite acceptance: kill a sweep mid-grid, restart against the
+    same store — zero re-probes of completed cells, and the final Pareto
+    set is identical to an uninterrupted sweep's."""
+    cfg = _config(ranks=(3, 4))   # 2 nnz × 2 ranks = 4 cells
+    n_cells = len(cfg.cells())
+
+    calls = []
+    _fake_timer(monkeypatch, calls)
+    oneshot_store = TuningStore(tmp_path / "oneshot.json", nnz_tol=0.0)
+    oneshot = run_sweep(cfg, oneshot_store)
+    assert oneshot.count("measured") == n_cells
+    probes_full = len(calls)
+
+    # "Kill" after 2 cells: max_cells defers the rest of the grid.
+    calls.clear()
+    store = TuningStore(tmp_path / "interrupted.json", nnz_tol=0.0)
+    partial = run_sweep(cfg, store, max_cells=2)
+    assert partial.count("measured") == 2
+    assert partial.count("deferred") == n_cells - 2
+    probes_before_kill = len(calls)
+
+    # Restart: completed cells skip without a single probe.
+    calls.clear()
+    resumed = run_sweep(cfg, store)
+    assert resumed.count("complete") == 2
+    assert resumed.count("measured") == n_cells - 2
+    assert all(c[1] is not None for c in calls)  # sanity: (name, mode) rows
+    assert len(calls) == probes_full - probes_before_kill
+
+    # Identical final Pareto set (deterministic timings make this exact).
+    def front_view(s):
+        return {(p["cell"], p["candidate"], p["time_s"], p["index_bytes"])
+                for p in pareto_report(s)["front"]}
+    assert front_view(store) == front_view(oneshot_store)
+
+
+def test_no_resume_forgets_and_remeasures(tmp_path, monkeypatch):
+    calls = []
+    _fake_timer(monkeypatch, calls)
+    cfg = _config(tensors=(_band(nnz=(150,)),))
+    store = TuningStore(tmp_path / "sweep.json", nnz_tol=0.0)
+    run_sweep(cfg, store)
+    calls.clear()
+    redo = run_sweep(cfg, store, resume=False)
+    assert redo.count("measured") == 1
+    assert len(calls) > 0
+    assert len(store) == 1        # overwrote, not duplicated
+
+
+def test_capacity_axis_fingerprints_distinctly(tmp_path, monkeypatch):
+    """Schema v5's reason to exist: an explicit-capacity cell and the
+    decider-default cell are different workloads and must coexist in the
+    store instead of warm-serving each other."""
+    _fake_timer(monkeypatch)
+    cfg = _config(tensors=(_band(nnz=(150,)),), capacities=(None, 16))
+    store = TuningStore(tmp_path / "sweep.json", nnz_tol=0.0)
+    result = run_sweep(cfg, store)
+    assert result.count("measured") == 2
+    assert len(store) == 2
+    caps = sorted((e.key.capacity for e in store.entries()),
+                  key=lambda c: (c is not None, c))
+    assert caps == [None, 16]
+    # each cell resumes from its own entry
+    again = run_sweep(cfg, store)
+    assert again.n_probes == 0
+    assert again.count("complete") == 2
+
+
+# ---------------------------------------------------------------------------
+# Pareto report
+# ---------------------------------------------------------------------------
+
+def test_report_points_carry_all_required_axes(tmp_path, monkeypatch):
+    """Acceptance: every report point carries (time, rel-error, index
+    bytes, peak-fraction)."""
+    _fake_timer(monkeypatch)
+    cfg = _config()
+    store = TuningStore(tmp_path / "sweep.json", nnz_tol=0.0)
+    run_sweep(cfg, store)
+    rep = pareto_report(store)
+    assert rep["n_entries"] == 2
+    assert rep["n_points"] == 2 * len(CANDS)
+    assert rep["n_pareto"] >= 2          # at least one efficient point/cell
+    for p in rep["points"]:
+        assert p["time_s"] > 0
+        assert p["rel_error"] == 0.0     # lossless candidates only
+        assert p["index_bytes"] > 0
+        assert 0 < p["peak_fraction"]
+        assert p["roofline_dominant"] in ("compute_s", "memory_s",
+                                          "collective_s")
+        assert isinstance(p["pareto"], bool)
+    assert {p["cell"] for p in rep["front"]} == {p["cell"]
+                                                 for p in rep["points"]}
+
+
+def test_pareto_front_marks_dominance_per_cell():
+    mk = {"rel_error": 0.0, "index_bytes": 100.0}
+    points = [
+        {"cell": "a", "candidate": "x", "time_s": 1.0, **mk},
+        {"cell": "a", "candidate": "y", "time_s": 2.0, **mk},   # dominated
+        {"cell": "a", "candidate": "z", "time_s": 2.0,
+         "rel_error": 0.0, "index_bytes": 50.0},                # trades off
+        # same timings in another cell must not cross-dominate
+        {"cell": "b", "candidate": "y", "time_s": 2.0, **mk},
+    ]
+    front = pareto_front(points)
+    assert {(p["cell"], p["candidate"]) for p in front} == {
+        ("a", "x"), ("a", "z"), ("b", "y")}
+    assert [p["pareto"] for p in points] == [True, False, True, True]
+
+
+# ---------------------------------------------------------------------------
+# Concurrent sweep workers share one store
+# ---------------------------------------------------------------------------
+
+def test_parallel_sweep_workers_drop_no_cells(tmp_path, monkeypatch):
+    """Two workers splitting one grid into one shared store: every cell's
+    entry must survive (save() serializes read-merge-write under the
+    advisory lock; see test_autotune_persist for the raw two-writer
+    race)."""
+    _fake_timer(monkeypatch)
+    cfg_a = _config(tensors=(_band(nnz=(150,)),))
+    cfg_b = _config(tensors=(_band(nnz=(200,)),))
+    path = tmp_path / "shared.json"
+    results = {}
+
+    def worker(tag, cfg):
+        results[tag] = run_sweep(cfg, TuningStore(path, nnz_tol=0.0))
+
+    threads = [threading.Thread(target=worker, args=(t, c))
+               for t, c in (("a", cfg_a), ("b", cfg_b))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert results["a"].count("failed") == 0
+    assert results["b"].count("failed") == 0
+    merged = TuningStore(path, nnz_tol=0.0)
+    assert len(merged) == 2
+    # a third run over the union grid is fully warm
+    union = _config(tensors=(_band(nnz=(150, 200)),))
+    again = run_sweep(union, merged)
+    assert again.n_probes == 0
+    assert again.count("complete") == 2
+
+
+def test_failed_cell_does_not_take_down_the_grid(tmp_path, monkeypatch):
+    def exploding(name, engine, factors, mode, *, warmup, reps):
+        raise RuntimeError("probe rig on fire")
+    monkeypatch.setattr(_autotune, "_time_backend", exploding)
+    cfg = _config(tensors=(_band(nnz=(150,)),))
+    store = TuningStore(tmp_path / "sweep.json", nnz_tol=0.0)
+    result = run_sweep(cfg, store)
+    assert result.count("failed") == 1
+    assert result.outcomes[0].error is not None
+    assert len(store) == 0
