@@ -39,7 +39,7 @@ def _tune_rows(iters: int, fast: bool, accuracy_budget: float | None):
     where each fixed-point preset competes under its measured error.  The
     CI `format-autotune` job gates on these rows."""
     rows = []
-    budgets = [None] + ([accuracy_budget] if accuracy_budget is not None else [])
+    budgets = [None] if accuracy_budget is None else [None, accuracy_budget]
     for tname in TENSORS:
         st = table1_tensor(tname, nnz=8000 if fast else None)
         plans = PlanCache()

@@ -1,0 +1,66 @@
+"""repro — PRISM sparse-MTTKRP tensor decomposition, reproduced on JAX.
+
+The supported product surface, re-exported from the four subsystems:
+
+- `repro.core`    — `SparseTensor`, CP-ALS (`cp_als`), the MTTKRP kernels'
+                    reference implementations, fixed-point `QFormat`s.
+- `repro.engine`  — `build_engine`/`autotune_engine` (backend registry,
+                    persistent autotuner, calibrated cost prior).
+- `repro.formats` — pluggable sparse layouts (COO/CSF/ALTO) + `FormatStats`.
+- `repro.sweep`   — offline design-space sweeps shipping warm tuning stores.
+
+Everything importable from `repro` directly is API; subpackages not
+re-exported here (`repro.models`, `repro.configs`, the LM launch/optim/data
+stack) are quarantined growth-seed scaffolding kept only for their seed
+tests — see docs/static-analysis.md#import-orphans.
+"""
+from __future__ import annotations
+
+from repro.core import (
+    TABLE1,
+    CPResult,
+    QFormat,
+    SparseTensor,
+    cp_als,
+    random_tensor,
+    table1_tensor,
+)
+from repro.engine import (
+    AutotuneReport,
+    TuningStore,
+    autotune_engine,
+    build_engine,
+    register_backend,
+    registered_backends,
+)
+from repro.formats import (
+    FormatCache,
+    FormatStats,
+    register_format,
+    registered_formats,
+)
+from repro.sweep import SweepConfig, load_config, pareto_report, run_sweep
+
+__all__ = [
+    "TABLE1",
+    "AutotuneReport",
+    "CPResult",
+    "FormatCache",
+    "FormatStats",
+    "QFormat",
+    "SparseTensor",
+    "SweepConfig",
+    "TuningStore",
+    "autotune_engine",
+    "build_engine",
+    "cp_als",
+    "load_config",
+    "pareto_report",
+    "random_tensor",
+    "register_backend",
+    "register_format",
+    "registered_backends",
+    "registered_formats",
+    "run_sweep",
+    "table1_tensor",
+]

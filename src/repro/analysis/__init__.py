@@ -1,0 +1,67 @@
+"""Repo-aware static-analysis pass suite.
+
+Two rule families over one AST engine (`engine.py`, a rule registry
+mirroring `repro.engine.registry`):
+
+- **JAX tracing hygiene** (`jax_rules.py`) — retrace hazards, host-device
+  syncs, tracer leakage, nondeterminism in the kernel/engine hot paths;
+  the pre-flight the ROADMAP's TPU `interpret=False` item needs before
+  real hardware makes these bugs expensive.
+- **Cross-module invariants** (`invariant_rules.py`) — persist-schema
+  manifest pinning, byte-term arity vs the NNLS design matrix, registry ↔
+  docs anchor agreement, import-graph orphans + seed-scaffolding
+  quarantine.
+
+Run it::
+
+    python -m repro.analysis [--strict] [--json]   # CI: --strict --json
+    python -m repro.analysis --list-rules
+    python -m repro.analysis --regen-manifest      # after an intentional
+                                                   # _SCHEMA_VERSION bump
+
+Suppress a finding in place, with a reason::
+
+    x = float(y)  # repro-lint: disable=host-sync -- timing readout, cold path
+
+See docs/static-analysis.md for the rule catalog and how to add a rule.
+"""
+from __future__ import annotations
+
+from . import invariant_rules, jax_rules  # imported for side effect: register the rules
+from .docanchors import extract_anchor_refs, extract_anchors
+from .engine import (
+    AnalysisResult,
+    FileContext,
+    Finding,
+    ProjectContext,
+    RuleSpec,
+    Suppression,
+    check_source,
+    default_root,
+    get_rule,
+    register_rule,
+    registered_rules,
+    rule_table,
+    run_analysis,
+)
+from .invariant_rules import extract_schema, regen_manifest
+
+__all__ = [
+    "AnalysisResult",
+    "FileContext",
+    "Finding",
+    "ProjectContext",
+    "RuleSpec",
+    "Suppression",
+    "check_source",
+    "default_root",
+    "extract_anchor_refs",
+    "extract_anchors",
+    "extract_schema",
+    "get_rule",
+    "regen_manifest",
+    "register_rule",
+    "registered_rules",
+    "rule_table",
+    "run_analysis",
+]

@@ -1,0 +1,79 @@
+"""`python -m repro.analysis` — run the static-analysis pass suite.
+
+Exit codes: 0 clean, 1 findings, 2 usage/setup error (mirrors the
+benchmark CLIs' convention).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .engine import default_root, registered_rules, rule_table, run_analysis
+from .invariant_rules import regen_manifest
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX tracing hygiene + cross-module invariant checks "
+                    "(see docs/static-analysis.md)")
+    ap.add_argument("--strict", action="store_true",
+                    help="also fail on suppression hygiene: unknown rule "
+                         "ids in disables, missing reasons, unused "
+                         "suppressions (the CI gate)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit the machine-readable report on stdout")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: inferred from the installed "
+                         "package location)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--regen-manifest", action="store_true",
+                    help="regenerate analysis/schema_manifest.json from "
+                         "the live persist.py (the intentional-bump "
+                         "workflow) and exit")
+    args = ap.parse_args(argv)
+
+    root = args.root if args.root is not None else default_root()
+    if not (root / "src" / "repro").is_dir():
+        print(f"error: {root} does not look like the repo root "
+              "(no src/repro/) — pass --root", file=sys.stderr)
+        return 2
+
+    if args.list_rules:
+        print(rule_table(docs_base=None))
+        return 0
+
+    if args.regen_manifest:
+        manifest = regen_manifest(root)
+        print(f"wrote src/repro/analysis/schema_manifest.json "
+              f"(schema_version={manifest['schema_version']}, "
+              f"{len(manifest['classes'])} classes)")
+        return 0
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = [r for r in rules if r not in registered_rules()]
+        if unknown:
+            print(f"error: unknown rule id(s) {unknown}; see --list-rules",
+                  file=sys.stderr)
+            return 2
+        # Keep project/file rules as named; meta checks always apply.
+        rules = [r for r in rules
+                 if registered_rules()[r].scope in ("file", "project")]
+
+    result = run_analysis(root, rules=rules, strict=args.strict)
+    if args.as_json:
+        print(json.dumps(result.to_json(), indent=2))
+    else:
+        print(result.human())
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

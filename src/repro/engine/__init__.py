@@ -16,7 +16,7 @@ from __future__ import annotations
 
 from collections.abc import Callable
 
-from . import backends as _backends  # noqa: F401 — registers the built-ins
+from . import backends as _backends  # imported for side effect: registers the built-ins
 from .autotune import AutotuneReport, autotune_engine
 from .calibrate import (
     CalibratedPrior,

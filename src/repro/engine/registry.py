@@ -164,12 +164,14 @@ def build_candidate(candidate: str, ctx: EngineContext):
 
 def preset_candidates(*, n_devices: int | None = None) -> list[str]:
     """Every lossy (backend, preset) candidate id this process could build:
-    what an accuracy budget adds to the default candidate set."""
+    what an accuracy budget adds to the default candidate set.  Sorted by
+    name so the enumeration (and everything keyed on it: probe order,
+    store fingerprints, tie-breaks) is independent of registration order."""
     if n_devices is None:
         n_devices = len(jax.devices())
     return [
         f"{s.name}:{p}"
-        for s in _REGISTRY.values()
+        for s in sorted(_REGISTRY.values(), key=lambda s: s.name)
         if not s.lossless and n_devices >= s.min_devices
         for p in s.presets
     ]
@@ -180,12 +182,14 @@ def eligible_backends(
     n_devices: int | None = None,
     lossless_only: bool = False,
 ) -> list[str]:
-    """Backends whose device requirements this process satisfies."""
+    """Backends whose device requirements this process satisfies, sorted by
+    name — registration (import) order must not leak into probe order or
+    autotune tie-breaks."""
     if n_devices is None:
         n_devices = len(jax.devices())
     return [
         s.name
-        for s in _REGISTRY.values()
+        for s in sorted(_REGISTRY.values(), key=lambda s: s.name)
         if n_devices >= s.min_devices and (s.lossless or not lossless_only)
     ]
 
@@ -207,7 +211,7 @@ def backend_table(docs_base: str | None = "docs/candidates.md") -> str:
         "| backend | chunked | fixed-point | lossless | presets | min devices | description |",
         "|---------|---------|-------------|----------|---------|-------------|-------------|",
     ]
-    for s in _REGISTRY.values():
+    for s in sorted(_REGISTRY.values(), key=lambda s: s.name):
         presets = " ".join(_preset(p) for p in s.presets) if s.presets else "—"
         rows.append(
             f"| {_name(s.name)} | {'✓' if s.needs_chunking else '—'} "

@@ -163,7 +163,7 @@ def format_table(docs_base: str | None = "docs/candidates.md") -> str:
         f"| {_name(s.name)} | {'✓' if s.mode_agnostic else '—'} "
         f"| {'✓' if s.sorted_reduce else '—'} "
         f"| {s.description} |"
-        for s in _REGISTRY.values()
+        for s in sorted(_REGISTRY.values(), key=lambda s: s.name)
     )
     return "\n".join(rows)
 

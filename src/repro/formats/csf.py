@@ -105,7 +105,7 @@ def build_csf_tree(st: SparseTensor, mode: int) -> CSFModeTree:
     root, mids, inner = csf_mode_order(st.shape, mode)
     prefix = (root, *mids)
     # np.lexsort: last key is most significant → (root, mids..., inner).
-    keys = [st.coords[:, inner]] + [st.coords[:, m] for m in reversed(prefix)]
+    keys = [st.coords[:, inner], *(st.coords[:, m] for m in reversed(prefix))]
     perm = np.lexsort(tuple(keys)).astype(np.int64)
     coords_s = st.coords[perm]
 

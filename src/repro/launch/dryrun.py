@@ -258,9 +258,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         seq, batch = max(seq // reduced, 128), max(batch // reduced, 1)
     kind = sh["kind"]
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered, extras = _lower_cell(cfg, kind, seq, batch, mesh, grad_accum)
-    rec["lower_s"] = time.time() - t0
+    rec["lower_s"] = time.perf_counter() - t0
     p_structs = extras["p_structs"]
     n_active = count_active_params(cfg, p_structs)
     rec["n_params"] = float(sum(math.prod(l.shape)
@@ -270,9 +270,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     rec["model_flops"] = model_flops(
         n_active, tokens, "train" if kind == "train" else "serve")
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     compiled, costs = _cell_costs(lowered)
-    rec["compile_s"] = time.time() - t0
+    rec["compile_s"] = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     rec["memory"] = dict(
@@ -351,7 +351,7 @@ def main():
             for mp in meshes:
                 tag = f"{arch}×{shape}×{'2x16x16' if mp else '16x16'}"
                 try:
-                    t0 = time.time()
+                    t0 = time.perf_counter()
                     rec = run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
                                    grad_accum=args.grad_accum,
                                    optimized=args.opt)

@@ -57,9 +57,9 @@ def main(argv=None):
     params, _ = lm.init(jax.random.key(0))
     prompts = jnp.asarray(SyntheticTokens(
         cfg.vocab, args.prompt_len, args.batch).batch(0))
-    t0 = time.time()
+    t0 = time.perf_counter()
     toks = generate(lm, params, ctx, prompts, args.gen)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"[serve] generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")
     print(np.asarray(toks[:2]))

@@ -38,7 +38,7 @@ def _q8(x):
         x = x[None]
     *lead, last = x.shape
     pad = (-last) % _BLOCK
-    xp = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    xp = jnp.pad(x, [*([(0, 0)] * len(lead)), (0, pad)])
     blocks = xp.reshape(*lead, -1, _BLOCK)
     scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
     scale = jnp.maximum(scale, 1e-12).astype(jnp.float32)

@@ -315,7 +315,7 @@ def _load_toml(path: str) -> dict:
         import tomllib
     except ImportError:
         try:
-            import tomli as tomllib  # noqa: F401
+            import tomli as tomllib
         except ImportError:
             tomllib = None
     if tomllib is not None:

@@ -197,7 +197,7 @@ def run_sweep(
                 # no probe pruning, no cross-mode elision.
                 max_probes=None, elide=False,
                 accuracy_budget=config.accuracy_budget)
-        except Exception as e:  # noqa: BLE001 — one broken cell, not the grid
+        except Exception as e:  # blind by design: one broken cell must not kill the grid
             outcomes.append(_outcome(
                 cell, "failed", seconds=time.perf_counter() - t0,
                 error=f"{type(e).__name__}: {e}"))

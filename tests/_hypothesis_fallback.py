@@ -23,7 +23,7 @@ class _Strategy:
         self.sample = sample
 
 
-class strategies:  # noqa: N801 — mirrors the `hypothesis.strategies` module
+class strategies:  # lowercase name mirrors the `hypothesis.strategies` module
     @staticmethod
     def integers(min_value: int, max_value: int) -> _Strategy:
         return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))

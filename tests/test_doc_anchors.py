@@ -1,0 +1,76 @@
+"""Doc-anchor round-trips: every link the generated capability tables emit
+must resolve to an `<a id=...>` anchor in the committed docs, and the
+anchor parser itself must handle the idioms those docs use.  This is the
+unit-test twin of the `registry-docs` analysis rule — it pins the parser's
+behavior so the rule's zero-findings gate means what it says."""
+import pytest
+
+from repro.analysis import engine as _engine
+from repro.analysis.docanchors import extract_anchor_refs, extract_anchors
+from repro.engine.registry import backend_table, registered_backends
+from repro.formats import format_table, registered_formats
+
+REPO = _engine.default_root()
+CANDIDATES = "docs/candidates.md"
+ANALYSIS_DOC = "docs/static-analysis.md"
+
+
+def test_extract_anchors_ids_and_lines():
+    md = '# T\n<a id="alpha"></a>\ntext\n<a id="beta-2"></a> after\n'
+    anchors = extract_anchors(md)
+    assert anchors == {"alpha": 2, "beta-2": 4}
+
+
+def test_extract_anchor_refs_targets_and_fragments():
+    md = ("see [`csf`](docs/candidates.md#csf) and\n"
+          "[same-doc](#preset-int7) plus [plain](docs/store-schema.md)\n")
+    refs = extract_anchor_refs(md)
+    assert ("docs/candidates.md", "csf", 1) in refs
+    assert ("", "preset-int7", 2) in refs
+    # links without a fragment are not anchor refs
+    assert all(frag for _t, frag, _l in refs)
+
+
+def _anchors(rel):
+    path = REPO / rel
+    assert path.is_file(), f"{rel} missing"
+    return extract_anchors(path.read_text(encoding="utf-8"))
+
+
+@pytest.mark.parametrize("table_fn", [backend_table, format_table],
+                         ids=["backend_table", "format_table"])
+def test_generated_table_refs_resolve(table_fn):
+    anchors = _anchors(CANDIDATES)
+    refs = [r for r in extract_anchor_refs(table_fn())
+            if r[0] == CANDIDATES]
+    assert refs, "generated table emitted no doc links"
+    missing = sorted({frag for _t, frag, _l in refs} - set(anchors))
+    assert not missing, f"unanchored fragments in {CANDIDATES}: {missing}"
+
+
+def test_every_registered_id_is_anchored():
+    anchors = _anchors(CANDIDATES)
+    for name, spec in registered_backends().items():
+        assert name in anchors, f"backend {name!r} has no anchor"
+        for preset in spec.presets:
+            assert f"preset-{preset}" in anchors, \
+                f"preset {name}:{preset} has no anchor"
+    for name in registered_formats():
+        assert name in anchors, f"format {name!r} has no anchor"
+
+
+def test_rule_table_refs_resolve_in_analysis_doc():
+    from repro.analysis import rule_table
+
+    anchors = _anchors(ANALYSIS_DOC)
+    refs = [r for r in extract_anchor_refs(rule_table())
+            if r[0] == ANALYSIS_DOC]
+    assert refs
+    missing = sorted({frag for _t, frag, _l in refs} - set(anchors))
+    assert not missing, \
+        f"rule ids without a docs section anchor in {ANALYSIS_DOC}: {missing}"
+
+
+def test_plain_mode_tables_emit_no_links():
+    for text in (backend_table(docs_base=None), format_table(docs_base=None)):
+        assert not extract_anchor_refs(text)
