@@ -1,7 +1,9 @@
 """Repo-aware static-analysis pass suite.
 
-Two rule families over one AST engine (`engine.py`, a rule registry
+Two tiers of rules over one AST engine (`engine.py`, a rule registry
 mirroring `repro.engine.registry`):
+
+**Syntactic tier** — cheap per-node passes:
 
 - **JAX tracing hygiene** (`jax_rules.py`) — retrace hazards, host-device
   syncs, tracer leakage, nondeterminism in the kernel/engine hot paths;
@@ -12,12 +14,32 @@ mirroring `repro.engine.registry`):
   docs anchor agreement, import-graph orphans + seed-scaffolding
   quarantine.
 
+**Dataflow tier** — abstract interpretation (`dataflow.py`: symbolic
+shape lattice with the padding/divisibility algebra, jnp x64-off dtype
+promotion):
+
+- **Kernel shape contracts** (`shape_rules.py`) — every public MTTKRP
+  variant is proven to return `(dims[mode], rank)` over an (ndim, mode)
+  case grid, segment_sum `num_segments`/`indices_are_sorted` agreement,
+  Pallas BlockSpec divisibility + index_map arity; the public surface is
+  pinned in `kernel_contracts.json` (`--regen-contracts` to re-pin).
+- **Integer widths** (`width_rules.py`) — unguarded int64→int32 index
+  narrowing at the host/device seam, ALTO key word-geometry agreement
+  across modules, fixed-point accumulator overflow bounds re-derived
+  from the QFormat preset table.
+
 Run it::
 
-    python -m repro.analysis [--strict] [--json]   # CI: --strict --json
+    python -m repro.analysis [--strict] [--format json|sarif]
+    python -m repro.analysis --tier syntactic      # the fast pass
+    python -m repro.analysis --tier dataflow
     python -m repro.analysis --list-rules
+    python -m repro.analysis --baseline FILE       # fail only on findings
+                                                   # newer than the baseline
     python -m repro.analysis --regen-manifest      # after an intentional
                                                    # _SCHEMA_VERSION bump
+    python -m repro.analysis --regen-contracts     # after an intentional
+                                                   # kernel API change
 
 Suppress a finding in place, with a reason::
 
@@ -28,6 +50,7 @@ See docs/static-analysis.md for the rule catalog and how to add a rule.
 from __future__ import annotations
 
 from . import invariant_rules, jax_rules  # imported for side effect: register the rules
+from . import shape_rules, width_rules  # noqa: F401  (dataflow-tier rules)
 from .docanchors import extract_anchor_refs, extract_anchors
 from .engine import (
     AnalysisResult,
@@ -45,6 +68,8 @@ from .engine import (
     run_analysis,
 )
 from .invariant_rules import extract_schema, regen_manifest
+from .sarif import to_sarif
+from .shape_rules import load_contracts, regen_contracts
 
 __all__ = [
     "AnalysisResult",
@@ -59,9 +84,12 @@ __all__ = [
     "extract_anchors",
     "extract_schema",
     "get_rule",
+    "load_contracts",
+    "regen_contracts",
     "regen_manifest",
     "register_rule",
     "registered_rules",
     "rule_table",
     "run_analysis",
+    "to_sarif",
 ]

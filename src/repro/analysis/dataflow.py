@@ -1,0 +1,2026 @@
+"""Symbolic shape/dtype abstract interpretation over kernel ASTs.
+
+The syntactic rules (PR 7) see one AST node at a time; the defect class
+that actually bites a sparse-MTTKRP stack — shape mismatches between
+kernels, silent dtype demotion, integer-width overflow on linearized
+keys — needs *dataflow*: what shape/dtype does this expression have,
+given symbolic input shapes?  This module is that layer:
+
+  * a **dtype lattice** (`DType`, `promote`) matching jnp's promotion
+    under the x64-disabled defaults this repo runs with (float64 and
+    int64 canonicalize to their 32-bit forms everywhere);
+  * a **symbolic dim algebra** (`Dim`) over named sizes (`nnz`, `T`,
+    `P`, `R`, per-mode `I_m`/`S_m`) with just enough affine structure to
+    reason about the padding idioms the kernel stack uses —
+    `rows + (-rows) % chunk` and `-(-n // c) * c` both normalize to
+    "least multiple of `c` ≥ n" (`CeilMul`), which is what BlockSpec
+    divisibility checks need;
+  * an **intraprocedural abstract interpreter** (`Interpreter`) over
+    function ASTs: flow-sensitive statements with branch joins, concrete
+    loop unrolling, jnp/lax primitive models, `jax.vmap`, `.at[].add`
+    scatter checks, `jax.ops.segment_sum` call recording, and a
+    structural model of `pl.pallas_call` + `PrefetchScalarGridSpec` that
+    validates BlockSpecs and then interprets the kernel body with
+    block-shaped refs.
+
+`shape_rules.py` drives this against the contracts pinned in
+`kernel_contracts.json`; `width_rules.py` reuses the dtype lattice.
+The interpreter is deliberately *quiet on ignorance*: anything it does
+not model evaluates to Unknown and produces no finding — only positive
+evidence of a mismatch is reported (the zero-findings CI gate cannot
+afford speculative noise).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import itertools
+
+__all__ = [
+    "AArray",
+    "AConst",
+    "ADType",
+    "AInt",
+    "ATuple",
+    "AUnknown",
+    "CeilDiv",
+    "CeilMul",
+    "DType",
+    "Dim",
+    "Interpreter",
+    "ModNeg",
+    "ModuleEnv",
+    "Opaque",
+    "Problem",
+    "Program",
+    "SegmentSum",
+    "Sym",
+    "UNKNOWN",
+    "canonicalize",
+    "join_dims",
+    "parse_dtype",
+    "promote",
+]
+
+
+# ---------------------------------------------------------------------------
+# DType lattice
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DType:
+    """One element of the dtype lattice.  `weak` marks Python-scalar
+    provenance (jnp's weak types): a weak scalar adopts the other
+    operand's type instead of forcing a promotion."""
+
+    kind: str            # "bool" | "int" | "uint" | "float"
+    bits: int
+    weak: bool = False
+
+    def __str__(self) -> str:
+        if self.kind == "bool":
+            return "bool"
+        return f"{'weak ' if self.weak else ''}{self.kind}{self.bits}"
+
+
+_DTYPE_NAMES = {
+    "bool_": DType("bool", 8), "bool": DType("bool", 8),
+    "int8": DType("int", 8), "int16": DType("int", 16),
+    "int32": DType("int", 32), "int64": DType("int", 64),
+    "uint8": DType("uint", 8), "uint16": DType("uint", 16),
+    "uint32": DType("uint", 32), "uint64": DType("uint", 64),
+    "float16": DType("float", 16), "float32": DType("float", 32),
+    "float64": DType("float", 64),
+}
+
+
+def parse_dtype(name: str) -> DType | None:
+    return _DTYPE_NAMES.get(name)
+
+
+def canonicalize(dt: DType) -> DType:
+    """jax.config x64 disabled: every 64-bit type narrows to 32 bits on
+    array creation — the width seam `width_rules` exists for."""
+    if dt.bits == 64 and dt.kind in ("int", "uint", "float"):
+        return DType(dt.kind, 32, dt.weak)
+    return dt
+
+
+def _strong_promote(a: DType, b: DType) -> DType:
+    """Promotion of two strong (array) dtypes, matching what
+    `jnp.zeros((), a) + jnp.zeros((), b)` produces under x64-off —
+    verified empirically against the jax in this container
+    (tests/test_dataflow.py samples the grid)."""
+    if a == b:
+        return a
+    if a.kind == "bool":
+        return b
+    if b.kind == "bool":
+        return a
+    if a.kind == "float" or b.kind == "float":
+        fa = a.bits if a.kind == "float" else 0
+        fb = b.bits if b.kind == "float" else 0
+        bits = max(fa, fb)
+        # int participation promotes float16 only per jnp's lattice when
+        # both are float; int + float16 stays float16?  jnp: int32 +
+        # float16 -> float16 (value-preserving is off in default mode).
+        return canonicalize(DType("float", bits))
+    if a.kind == b.kind:  # int/int or uint/uint
+        return canonicalize(DType(a.kind, max(a.bits, b.bits)))
+    # mixed signed/unsigned
+    i, u = (a, b) if a.kind == "int" else (b, a)
+    if i.bits > u.bits:
+        return canonicalize(DType("int", i.bits))
+    return canonicalize(DType("int", min(2 * u.bits, 32)))
+
+
+def promote(a: DType, b: DType) -> DType:
+    """jnp result dtype of a binary op between `a` and `b` (x64 off)."""
+    a, b = canonicalize(a), canonicalize(b)
+    if a.weak and b.weak:
+        if "float" in (a.kind, b.kind):
+            return DType("float", 32, weak=True)
+        return DType(a.kind if a.kind == b.kind else "int", 32, weak=True)
+    if a.weak or b.weak:
+        w, s = (a, b) if a.weak else (b, a)
+        if w.kind == "float" and s.kind in ("bool", "int", "uint"):
+            return DType("float", 32)
+        if w.kind == "int" and s.kind == "bool":
+            return DType("int", 32)
+        return dataclasses.replace(s, weak=False)
+    return _strong_promote(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Symbolic dims
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Sym:
+    """A named size: `nnz`, `T`, `R`, `I0`, `S1`, ..."""
+
+    name: str
+
+    def __str__(self) -> str:
+        return self.name
+
+
+@dataclasses.dataclass(frozen=True)
+class CeilDiv:
+    """ceil(base / div) — `-(-n // c)`."""
+
+    base: "Dim"
+    div: "Dim"
+
+    def __str__(self) -> str:
+        return f"ceildiv({self.base},{self.div})"
+
+
+@dataclasses.dataclass(frozen=True)
+class CeilMul:
+    """Least multiple of `mult` that is ≥ `base` — the padded extent.
+    Divisible by `mult` by construction; that fact is what BlockSpec
+    divisibility checks consume."""
+
+    base: "Dim"
+    mult: "Dim"
+
+    def __str__(self) -> str:
+        return f"ceil({self.base},{self.mult})"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModNeg:
+    """(-base) % mod — the `rpad = (-rows) % chunk` padding amount."""
+
+    base: "Dim"
+    mod: "Dim"
+
+    def __str__(self) -> str:
+        return f"padto({self.base},{self.mod})"
+
+
+_OPAQUE_COUNTER = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True)
+class Opaque:
+    """A size the algebra cannot express; fresh per creation, equal only
+    to itself — two unknowns must never compare equal."""
+
+    tag: str
+    uid: int
+
+    def __str__(self) -> str:
+        return f"?{self.tag}"
+
+
+def _fresh(tag: str = "dim") -> "Dim":
+    return Dim.atom(Opaque(tag, next(_OPAQUE_COUNTER)))
+
+
+def _akey(a) -> tuple:
+    return (type(a).__name__, str(a), getattr(a, "uid", 0))
+
+
+class Dim:
+    """A symbolic nonnegative integer: `const + Σ coeff·mono` where each
+    mono is a sorted product of atoms.  Hashable/structural equality."""
+
+    __slots__ = ("terms", "const")
+
+    def __init__(self, terms: dict | tuple = (), const: int = 0):
+        if isinstance(terms, dict):
+            items = {m: c for m, c in terms.items() if c != 0}
+            self.terms = tuple(sorted(
+                items.items(), key=lambda mc: tuple(_akey(a) for a in mc[0])))
+        else:
+            self.terms = tuple(terms)
+        self.const = const
+
+    # -- constructors ------------------------------------------------------
+    @staticmethod
+    def const_(n: int) -> "Dim":
+        return Dim((), int(n))
+
+    @staticmethod
+    def sym(name: str) -> "Dim":
+        return Dim({(Sym(name),): 1})
+
+    @staticmethod
+    def atom(a) -> "Dim":
+        return Dim({(a,): 1})
+
+    @staticmethod
+    def of(x) -> "Dim":
+        if isinstance(x, Dim):
+            return x
+        if isinstance(x, bool):
+            return Dim.const_(int(x))
+        if isinstance(x, int):
+            return Dim.const_(x)
+        if isinstance(x, str):
+            return Dim.sym(x)
+        return Dim.atom(x)
+
+    # -- identity ----------------------------------------------------------
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, Dim) and self.terms == other.terms
+                and self.const == other.const)
+
+    def __hash__(self) -> int:
+        return hash((self.terms, self.const))
+
+    def __repr__(self) -> str:
+        return f"Dim({self})"
+
+    def __str__(self) -> str:
+        parts = []
+        for mono, c in self.terms:
+            m = "*".join(str(a) for a in mono)
+            parts.append(m if c == 1 else f"{c}*{m}")
+        if self.const or not parts:
+            parts.append(str(self.const))
+        return "+".join(parts)
+
+    @property
+    def is_const(self) -> bool:
+        return not self.terms
+
+    @property
+    def has_opaque(self) -> bool:
+        return any(isinstance(a, Opaque) for mono, _ in self.terms
+                   for a in mono)
+
+    # -- arithmetic --------------------------------------------------------
+    def __add__(self, other) -> "Dim":
+        other = Dim.of(other)
+        terms = dict(self.terms)
+        for m, c in other.terms:
+            terms[m] = terms.get(m, 0) + c
+        out = Dim(terms, self.const + other.const)
+        return _recognize_ceil(out)
+
+    __radd__ = __add__
+
+    def __neg__(self) -> "Dim":
+        return Dim({m: -c for m, c in self.terms}, -self.const)
+
+    def __sub__(self, other) -> "Dim":
+        return self + (-Dim.of(other))
+
+    def __rsub__(self, other) -> "Dim":
+        return Dim.of(other) + (-self)
+
+    def __mul__(self, other) -> "Dim":
+        other = Dim.of(other)
+        terms: dict = {}
+        const = self.const * other.const
+        for m, c in self.terms:
+            terms[m] = terms.get(m, 0) + c * other.const
+        for m, c in other.terms:
+            terms[m] = terms.get(m, 0) + c * self.const
+        for (m1, c1), (m2, c2) in itertools.product(self.terms, other.terms):
+            mono = _mul_monos(m1, m2)
+            terms[mono] = terms.get(mono, 0) + c1 * c2
+        return Dim(terms, const)
+
+    __rmul__ = __mul__
+
+    def __floordiv__(self, other) -> "Dim":
+        other = Dim.of(other)
+        exact = _try_exact_div(self, other)
+        if exact is not None:
+            return exact
+        neg = -self
+        if all(c > 0 for _, c in neg.terms) and neg.const >= 0 and neg.terms:
+            # (-x) // d == -ceil(x / d) for d > 0 — the `-(-n // c)`
+            # ceil idiom's inner half.
+            return -Dim.atom(CeilDiv(neg, other))
+        return _fresh("floordiv")
+
+    def __mod__(self, other) -> "Dim":
+        other = Dim.of(other)
+        if self.divisible_by(other):
+            return Dim.const_(0)
+        neg = -self
+        if all(c > 0 for _, c in neg.terms) and neg.const >= 0 and neg.terms:
+            return Dim.atom(ModNeg(neg, other))
+        return _fresh("mod")
+
+    # -- divisibility ------------------------------------------------------
+    def divisible_by(self, other) -> bool:
+        """Provably divisible (False means "cannot prove", not "no")."""
+        other = Dim.of(other)
+        if other == Dim.const_(1) or self == other:
+            return True
+        if other.is_const and other.const > 0:
+            k = other.const
+            return (self.const % k == 0
+                    and all(c % k == 0 or _mono_divisible(m, other)
+                            for m, c in self.terms))
+        if other.const == 0 and len(other.terms) == 1:
+            return (self.const == 0
+                    and all(_mono_divisible(m, other) for m, _ in self.terms))
+        return False
+
+
+def _mul_monos(m1: tuple, m2: tuple) -> tuple:
+    # ceildiv(b, d) * d  →  ceil(b, d): the outer half of `-(-n//c)*c`.
+    for a, b in ((m1, m2), (m2, m1)):
+        if len(a) == 1 and isinstance(a[0], CeilDiv):
+            if Dim({b: 1}) == a[0].div:
+                return (CeilMul(a[0].base, a[0].div),)
+    return tuple(sorted(m1 + m2, key=_akey))
+
+
+def _mono_divisible(mono: tuple, d: "Dim") -> bool:
+    """Does some atom of `mono` guarantee divisibility by `d`?"""
+    for a in mono:
+        if Dim({(a,): 1}) == d:
+            return True
+        if isinstance(a, CeilMul) and (a.mult == d or a.mult.divisible_by(d)):
+            return True
+    return False
+
+
+def _try_exact_div(dim: Dim, d: Dim) -> Dim | None:
+    if d == Dim.const_(1):
+        return dim
+    if d.is_const and d.const > 0:
+        k = d.const
+        if dim.const % k == 0 and all(c % k == 0 for _, c in dim.terms):
+            return Dim({m: c // k for m, c in dim.terms}, dim.const // k)
+        return None
+    if d.const == 0 and len(d.terms) == 1 and d.terms[0][1] == 1:
+        datoms = d.terms[0][0]
+        if dim.const != 0:
+            return None
+        out: dict = {}
+        for mono, c in dim.terms:
+            rest = list(mono)
+            for a in datoms:
+                if a in rest:
+                    rest.remove(a)
+                else:
+                    for x in rest:
+                        # ceil(b, m) / m == ceildiv(b, m)
+                        if isinstance(x, CeilMul) and Dim({(a,): 1}) == x.mult:
+                            rest.remove(x)
+                            rest.append(CeilDiv(x.base, x.mult))
+                            break
+                    else:
+                        return None
+            mono2 = tuple(sorted(rest, key=_akey)) or ()
+            key = mono2 if mono2 else None
+            if key is None:
+                return None if c != 1 and out else Dim.const_(c)
+            out[mono2] = out.get(mono2, 0) + c
+        return Dim(out, 0)
+    return None
+
+
+def _recognize_ceil(dim: Dim) -> Dim:
+    """`x + (-x) % b` → ceil-multiple of b — the `pad_factor` idiom."""
+    for mono, c in dim.terms:
+        if c == 1 and len(mono) == 1 and isinstance(mono[0], ModNeg):
+            mn = mono[0]
+            rest = Dim({m: k for m, k in dim.terms if m != mono},
+                       dim.const)
+            if rest == mn.base:
+                return Dim.atom(CeilMul(mn.base, mn.mod))
+    return dim
+
+
+def join_dims(a: Dim, b: Dim) -> Dim | None:
+    """Join of two branch values; None = no common refinement.
+
+    `x ⊔ ceil(x, b) = ceil(x, b)` is sound here because the unpadded
+    branch is only taken when x is already a multiple of b (that is what
+    `if rpad or cpad:` tests), so both branches are multiples of b and
+    both are ≥ x's padded-down value — every property the checks consume
+    (divisibility by b, equality with the other operand's padded dim)
+    holds for the join."""
+    if a == b:
+        return a
+    for x, y in ((a, b), (b, a)):
+        if (len(x.terms) == 1 and x.const == 0 and x.terms[0][1] == 1
+                and len(x.terms[0][0]) == 1
+                and isinstance(x.terms[0][0][0], CeilMul)
+                and x.terms[0][0][0].base == y):
+            return x
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Abstract values
+# ---------------------------------------------------------------------------
+
+class AVal:
+    """Base of the abstract-value hierarchy."""
+
+
+@dataclasses.dataclass
+class AUnknown(AVal):
+    def __repr__(self) -> str:
+        return "Unknown"
+
+
+UNKNOWN = AUnknown()
+
+
+@dataclasses.dataclass
+class AConst(AVal):
+    """A concrete Python value (int, str, bool, None, tuple of such)."""
+
+    value: object
+
+
+@dataclasses.dataclass
+class AInt(AVal):
+    """A symbolic Python integer (sizes, offsets)."""
+
+    dim: Dim
+
+
+@dataclasses.dataclass
+class AArray(AVal):
+    """A device array: symbolic shape + lattice dtype."""
+
+    shape: tuple
+    dtype: DType
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+
+@dataclasses.dataclass
+class ATuple(AVal):
+    items: list
+    mutable: bool = False
+
+
+@dataclasses.dataclass
+class ADType(AVal):
+    dtype: DType
+
+
+@dataclasses.dataclass
+class AFunc(AVal):
+    """A known primitive (canonical dotted name) with optional payload
+    (e.g. the mapped closure for jax.vmap)."""
+
+    name: str
+    payload: tuple = ()
+
+
+@dataclasses.dataclass
+class AClosure(AVal):
+    node: object          # ast.FunctionDef | ast.Lambda
+    env: dict             # captured enclosing scope (lambdas)
+    name: str
+    module: object        # ModuleEnv it was defined in
+
+
+@dataclasses.dataclass
+class APartial(AVal):
+    func: AVal
+    args: list
+    kwargs: dict
+
+
+@dataclasses.dataclass
+class AModule(AVal):
+    module: object        # ModuleEnv
+
+
+@dataclasses.dataclass
+class ABound(AVal):
+    """A method bound to an abstract receiver (`x.astype`, `l.at[c].add`,
+    `rows.append`)."""
+
+    base: AVal
+    attr: str
+
+
+@dataclasses.dataclass
+class AAtIndexed(AVal):
+    """`arr.at[idx]` — scatter target; `.add/.set/...` validates."""
+
+    base: AArray
+    index_shape: tuple    # shape of the selected region
+
+
+@dataclasses.dataclass
+class ABlockSpec(AVal):
+    block_shape: AVal
+    index_map: AVal
+    line: int
+
+
+@dataclasses.dataclass
+class AGridSpec(AVal):
+    grid: AVal
+    in_specs: AVal
+    out_specs: AVal
+    num_scalar_prefetch: int
+    line: int
+
+
+@dataclasses.dataclass
+class AShapeDtype(AVal):
+    shape: tuple
+    dtype: DType
+
+
+@dataclasses.dataclass
+class APallasCall(AVal):
+    kernel: AVal
+    grid_spec: AVal
+    out_shape: AVal
+    line: int
+
+
+@dataclasses.dataclass
+class SegmentSum:
+    """One recorded `jax.ops.segment_sum` call site."""
+
+    line: int
+    data_shape: tuple
+    ids_shape: tuple
+    num_segments: Dim | None
+    indices_are_sorted: bool
+    rel: str = ""         # repo-relative file the call lives in
+
+
+@dataclasses.dataclass
+class Problem:
+    """One positive finding from interpretation."""
+
+    line: int
+    message: str
+    category: str         # "shape" | "pallas"
+    rel: str = ""         # repo-relative file the defect lives in
+
+
+def as_dim(v: AVal) -> Dim | None:
+    if isinstance(v, AInt):
+        return v.dim
+    if isinstance(v, AConst) and isinstance(v.value, int) \
+            and not isinstance(v.value, bool):
+        return Dim.const_(v.value)
+    return None
+
+
+def _shape_str(shape: tuple) -> str:
+    return "(" + ", ".join(str(d) for d in shape) + ")"
+
+
+# ---------------------------------------------------------------------------
+# Modules / import resolution
+# ---------------------------------------------------------------------------
+
+#: leading dotted paths → canonical short prefix used in the primitive table
+_CANON_PREFIXES = [
+    ("jax.experimental.pallas.tpu", "pltpu"),
+    ("jax.experimental.pallas", "pl"),
+    ("jax.numpy", "jnp"),
+    ("jax.lax", "lax"),
+    ("jax.ops", "jax.ops"),
+    ("numpy", "np"),
+    ("functools", "functools"),
+    ("jax", "jax"),
+    ("math", "math"),
+]
+
+
+def _canon(dotted: str) -> str:
+    for prefix, short in _CANON_PREFIXES:
+        if dotted == prefix or dotted.startswith(prefix + "."):
+            return short + dotted[len(prefix):]
+    return dotted
+
+
+class ModuleEnv:
+    """Import aliases + top-level defs of one source file, resolved
+    lazily so interpreting one function never parses the world."""
+
+    def __init__(self, rel: str, tree: ast.Module, program: "Program"):
+        self.rel = rel
+        self.program = program
+        self.functions: dict[str, ast.FunctionDef] = {}
+        self.aliases: dict[str, str] = {}          # name -> external dotted
+        self.internal: dict[str, tuple[str, str | None]] = {}
+        self.constants: dict[str, AVal] = {}
+        for node in tree.body:
+            if isinstance(node, ast.FunctionDef):
+                self.functions[node.name] = node
+            elif isinstance(node, ast.Import):
+                for alias in node.names:
+                    self.aliases[alias.asname or alias.name.split(".")[0]] = (
+                        alias.name if alias.asname else alias.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom):
+                self._import_from(node)
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Constant):
+                self.constants[node.targets[0].id] = AConst(node.value.value)
+
+    def _import_from(self, node: ast.ImportFrom) -> None:
+        if node.level == 0:
+            for alias in node.names:
+                self.aliases[alias.asname or alias.name] = (
+                    f"{node.module}.{alias.name}" if node.module else alias.name)
+            return
+        # relative: resolve against this file's package directory
+        parts = self.rel.split("/")[:-1]
+        parts = parts[: len(parts) - (node.level - 1)]
+        if node.module:
+            parts = parts + node.module.split(".")
+        base = "/".join(parts)
+        for alias in node.names:
+            # `from . import ref` → sibling module; `from .m import f` →
+            # member of module file m.py (or package __init__.py)
+            key = alias.asname or alias.name
+            mod_as_file = f"{base}/{alias.name}.py"
+            if self.program.has_module(mod_as_file):
+                self.internal[key] = (mod_as_file, None)
+            elif self.program.has_module(f"{base}.py"):
+                self.internal[key] = (f"{base}.py", alias.name)
+            elif self.program.has_module(f"{base}/__init__.py"):
+                self.internal[key] = (f"{base}/__init__.py", alias.name)
+
+    def resolve(self, name: str) -> AVal | None:
+        if name in self.functions:
+            return AClosure(self.functions[name], {}, name, self)
+        if name in self.constants:
+            return self.constants[name]
+        if name in self.aliases:
+            return AFunc(_canon(self.aliases[name]))
+        if name in self.internal:
+            rel, member = self.internal[name]
+            target = self.program.module(rel)
+            if target is None:
+                return UNKNOWN
+            if member is None:
+                return AModule(target)
+            return target.resolve(member) or UNKNOWN
+        return None
+
+
+class Program:
+    """A set of parseable source files (repo-relative path → source),
+    usually supplied by the analysis ProjectContext."""
+
+    def __init__(self, sources: dict[str, str]):
+        self._sources = sources
+        self._modules: dict[str, ModuleEnv | None] = {}
+
+    def has_module(self, rel: str) -> bool:
+        return rel in self._sources
+
+    def module(self, rel: str) -> ModuleEnv | None:
+        if rel not in self._modules:
+            src = self._sources.get(rel)
+            if src is None:
+                self._modules[rel] = None
+            else:
+                try:
+                    self._modules[rel] = ModuleEnv(rel, ast.parse(src), self)
+                except SyntaxError:
+                    self._modules[rel] = None
+        return self._modules[rel]
+
+
+# ---------------------------------------------------------------------------
+# Interpreter
+# ---------------------------------------------------------------------------
+
+_NORMAL, _RETURN, _RAISE, _BREAK, _CONTINUE = range(5)
+
+_BUILTINS = {"range", "len", "enumerate", "zip", "reversed", "tuple", "list",
+             "sum", "max", "min", "int", "abs", "isinstance", "print",
+             "sorted"}
+
+_INT32 = DType("int", 32)
+_F32 = DType("float", 32)
+
+
+class Interpreter:
+    """Abstract interpreter for one function call.  Produces a return
+    value, a list of `Problem`s, and the `SegmentSum` call record."""
+
+    def __init__(self, program: Program, max_depth: int = 10):
+        self.program = program
+        self.problems: list[Problem] = []
+        self.segment_sums: list[SegmentSum] = []
+        self.max_depth = max_depth
+        self._depth = 0
+        self._steps = 0
+        self._rel_stack: list[str] = []
+
+    @property
+    def current_rel(self) -> str:
+        return self._rel_stack[-1] if self._rel_stack else ""
+
+    # -- entry -------------------------------------------------------------
+    def call_function(self, fndef: ast.FunctionDef, module: ModuleEnv,
+                      args: list, kwargs: dict) -> AVal:
+        env = self._bind(fndef, module, args, kwargs)
+        if env is None:
+            return UNKNOWN
+        self._depth += 1
+        self._rel_stack.append(module.rel)
+        try:
+            if self._depth > self.max_depth:
+                return UNKNOWN
+            returns: list[AVal] = []
+            self._exec_block(fndef.body, env, module, returns)
+            if not returns:
+                return AConst(None)
+            out = returns[0]
+            for r in returns[1:]:
+                out = self._join(out, r)
+            return out
+        finally:
+            self._rel_stack.pop()
+            self._depth -= 1
+
+    def problem(self, node, message: str, category: str = "shape") -> None:
+        line = node if isinstance(node, int) else getattr(node, "lineno", 0)
+        self.problems.append(Problem(line, message, category,
+                                     rel=self.current_rel))
+
+    # -- binding -----------------------------------------------------------
+    def _bind(self, fndef, module: ModuleEnv, args: list,
+              kwargs: dict) -> dict | None:
+        a = fndef.args
+        env: dict[str, AVal] = {}
+        names = [p.arg for p in a.posonlyargs + a.args]
+        pos = list(args)
+        for i, name in enumerate(names):
+            if i < len(pos):
+                env[name] = pos[i]
+            elif name in kwargs:
+                env[name] = kwargs.pop(name)
+        if a.vararg is not None:
+            env[a.vararg.arg] = ATuple(pos[len(names):])
+        defaults = a.defaults
+        for i, d in enumerate(defaults):
+            name = names[len(names) - len(defaults) + i]
+            if name not in env:
+                env[name] = self._eval(d, dict(env), module)
+        for p, d in zip(a.kwonlyargs, a.kw_defaults):
+            if p.arg in kwargs:
+                env[p.arg] = kwargs.pop(p.arg)
+            elif d is not None:
+                env[p.arg] = self._eval(d, dict(env), module)
+        for name in names:
+            env.setdefault(name, UNKNOWN)
+        for p in a.kwonlyargs:
+            env.setdefault(p.arg, UNKNOWN)
+        return env
+
+    # -- statements --------------------------------------------------------
+    def _exec_block(self, stmts, env, module, returns) -> int:
+        for stmt in stmts:
+            flow = self._exec(stmt, env, module, returns)
+            if flow != _NORMAL:
+                return flow
+        return _NORMAL
+
+    def _exec(self, stmt, env, module, returns) -> int:
+        self._steps += 1
+        if self._steps > 200_000:
+            return _RETURN                      # runaway guard: give up quietly
+        if isinstance(stmt, ast.Return):
+            returns.append(self._eval(stmt.value, env, module)
+                           if stmt.value is not None else AConst(None))
+            return _RETURN
+        if isinstance(stmt, ast.Raise):
+            return _RAISE
+        if isinstance(stmt, (ast.Break,)):
+            return _BREAK
+        if isinstance(stmt, (ast.Continue,)):
+            return _CONTINUE
+        if isinstance(stmt, (ast.Pass, ast.Global, ast.Nonlocal,
+                             ast.Import, ast.ImportFrom, ast.Assert)):
+            return _NORMAL
+        if isinstance(stmt, ast.FunctionDef):
+            env[stmt.name] = AClosure(stmt, dict(env), stmt.name, module)
+            return _NORMAL
+        if isinstance(stmt, ast.Expr):
+            self._eval(stmt.value, env, module)
+            return _NORMAL
+        if isinstance(stmt, ast.Assign):
+            val = self._eval(stmt.value, env, module)
+            for t in stmt.targets:
+                self._assign(t, val, env, module)
+            return _NORMAL
+        if isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._assign(stmt.target,
+                             self._eval(stmt.value, env, module), env, module)
+            return _NORMAL
+        if isinstance(stmt, ast.AugAssign):
+            cur = self._eval(stmt.target, env, module)
+            val = self._eval(stmt.value, env, module)
+            self._assign(stmt.target,
+                         self._binop(cur, stmt.op, val, stmt), env, module)
+            return _NORMAL
+        if isinstance(stmt, ast.If):
+            return self._exec_if(stmt, env, module, returns)
+        if isinstance(stmt, ast.For):
+            return self._exec_for(stmt, env, module, returns)
+        if isinstance(stmt, ast.While):
+            self._havoc(stmt, env)
+            return _NORMAL
+        if isinstance(stmt, ast.With):
+            return self._exec_block(stmt.body, env, module, returns)
+        if isinstance(stmt, ast.Try):
+            flow = self._exec_block(stmt.body, env, module, returns)
+            self._exec_block(stmt.finalbody, env, module, returns)
+            return _NORMAL if flow == _RAISE else flow
+        return _NORMAL
+
+    def _exec_if(self, stmt, env, module, returns) -> int:
+        t = self._truth(self._eval(stmt.test, env, module))
+        if t is True:
+            return self._exec_block(stmt.body, env, module, returns)
+        if t is False:
+            return self._exec_block(stmt.orelse, env, module, returns)
+        env_t, env_f = dict(env), dict(env)
+        flow_t = self._exec_block(stmt.body, env_t, module, returns)
+        flow_f = self._exec_block(stmt.orelse, env_f, module, returns)
+        live = [(f, e) for f, e in ((flow_t, env_t), (flow_f, env_f))
+                if f == _NORMAL]
+        if not live:
+            return flow_t if flow_t != _NORMAL else flow_f
+        env.clear()
+        if len(live) == 1:
+            env.update(live[0][1])
+            return _NORMAL
+        merged = {}
+        for k in set(env_t) | set(env_f):
+            if k in env_t and k in env_f:
+                merged[k] = self._join(env_t[k], env_f[k])
+            else:
+                merged[k] = UNKNOWN
+        env.update(merged)
+        return _NORMAL
+
+    def _exec_for(self, stmt, env, module, returns) -> int:
+        it = self._eval(stmt.iter, env, module)
+        items = None
+        if isinstance(it, ATuple):
+            items = list(it.items)
+        elif isinstance(it, AConst) and isinstance(it.value, (range, tuple, list)):
+            items = [AConst(v) for v in it.value]
+        if items is None or len(items) > 256:
+            self._havoc(stmt, env)
+            return _NORMAL
+        for item in items:
+            self._assign(stmt.target, item, env, module)
+            flow = self._exec_block(stmt.body, env, module, returns)
+            if flow == _BREAK:
+                return _NORMAL
+            if flow in (_RETURN, _RAISE):
+                return flow
+        self._exec_block(stmt.orelse, env, module, returns)
+        return _NORMAL
+
+    def _havoc(self, stmt, env) -> None:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+                env[node.id] = UNKNOWN
+
+    def _assign(self, target, val, env, module) -> None:
+        if isinstance(target, ast.Name):
+            env[target.id] = val
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            items = (list(val.items) if isinstance(val, ATuple)
+                     else [AConst(v) for v in val.value]
+                     if isinstance(val, AConst)
+                     and isinstance(val.value, (tuple, list))
+                     else None)
+            if items is not None and len(items) == len(target.elts):
+                for t, v in zip(target.elts, items):
+                    self._assign(t, v, env, module)
+            else:
+                for t in target.elts:
+                    if isinstance(t, ast.Starred):
+                        t = t.value
+                    self._assign(t, UNKNOWN, env, module)
+        elif isinstance(target, ast.Subscript):
+            base = self._eval(target.value, env, module)
+            if isinstance(base, AArray):
+                idx = self._eval_index(target.slice, env, module)
+                region = self._index_shape(base, idx, target)
+                self._check_store(base, region, val, target)
+            elif isinstance(base, ATuple) and base.mutable:
+                i = self._concrete_int(self._eval(target.slice, env, module))
+                if i is not None and -len(base.items) <= i < len(base.items):
+                    base.items[i] = val
+        # attribute stores and the rest: ignore
+
+    def _check_store(self, base: AArray, region: tuple | None, val, node):
+        if region is None:
+            return
+        if isinstance(val, AArray):
+            self._broadcast(region, val.shape, node,
+                            what="stored value vs target slice")
+            res = promote(val.dtype, base.dtype)
+            if dataclasses.replace(res, weak=False) != \
+                    dataclasses.replace(base.dtype, weak=False):
+                self.problem(node,
+                             f"store of {val.dtype} into {base.dtype} ref "
+                             "silently demotes the value")
+
+    # -- joins -------------------------------------------------------------
+    def _join(self, a: AVal, b: AVal) -> AVal:
+        if a is b:
+            return a
+        if isinstance(a, AArray) and isinstance(b, AArray):
+            if a.ndim != b.ndim:
+                return UNKNOWN
+            dims = tuple(join_dims(x, y) or _fresh("join")
+                         for x, y in zip(a.shape, b.shape))
+            dt = a.dtype if a.dtype == b.dtype else promote(a.dtype, b.dtype)
+            return AArray(dims, dt)
+        if isinstance(a, AInt) and isinstance(b, AInt):
+            return AInt(join_dims(a.dim, b.dim) or _fresh("join"))
+        if isinstance(a, AConst) and isinstance(b, AConst):
+            return a if a.value == b.value else UNKNOWN
+        if isinstance(a, ATuple) and isinstance(b, ATuple) \
+                and len(a.items) == len(b.items):
+            return ATuple([self._join(x, y)
+                           for x, y in zip(a.items, b.items)])
+        return UNKNOWN
+
+    def _truth(self, v: AVal) -> bool | None:
+        if isinstance(v, AConst):
+            try:
+                return bool(v.value)
+            except Exception:
+                return None
+        if isinstance(v, AInt) and v.dim.is_const:
+            return bool(v.dim.const)
+        return None
+
+    def _concrete_int(self, v: AVal) -> int | None:
+        if isinstance(v, AConst) and isinstance(v.value, int) \
+                and not isinstance(v.value, bool):
+            return v.value
+        if isinstance(v, AInt) and v.dim.is_const:
+            return v.dim.const
+        return None
+
+    # -- expressions -------------------------------------------------------
+    def _eval(self, node, env, module: ModuleEnv) -> AVal:
+        self._steps += 1
+        if self._steps > 200_000:
+            return UNKNOWN
+        if isinstance(node, ast.Constant):
+            return AConst(node.value)
+        if isinstance(node, ast.Name):
+            if node.id in env:
+                return env[node.id]
+            resolved = module.resolve(node.id)
+            if resolved is not None:
+                return resolved
+            if node.id in _BUILTINS:
+                return AFunc(f"builtin.{node.id}")
+            return UNKNOWN
+        if isinstance(node, ast.Attribute):
+            return self._eval_attribute(node, env, module)
+        if isinstance(node, ast.Subscript):
+            return self._eval_subscript(node, env, module)
+        if isinstance(node, ast.Call):
+            return self._eval_call(node, env, module)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            items: list[AVal] = []
+            for e in node.elts:
+                if isinstance(e, ast.Starred):
+                    v = self._eval(e.value, env, module)
+                    if isinstance(v, ATuple):
+                        items.extend(v.items)
+                    else:
+                        return UNKNOWN
+                else:
+                    items.append(self._eval(e, env, module))
+            return ATuple(items, mutable=isinstance(node, ast.List))
+        if isinstance(node, ast.BinOp):
+            return self._binop(self._eval(node.left, env, module), node.op,
+                               self._eval(node.right, env, module), node)
+        if isinstance(node, ast.UnaryOp):
+            v = self._eval(node.operand, env, module)
+            if isinstance(node.op, ast.USub):
+                d = as_dim(v)
+                if isinstance(v, AConst) and isinstance(v.value, (int, float)):
+                    return AConst(-v.value)
+                if d is not None:
+                    return AInt(-d)
+                if isinstance(v, AArray):
+                    return v
+            if isinstance(node.op, ast.Not):
+                t = self._truth(v)
+                return AConst(not t) if t is not None else UNKNOWN
+            return UNKNOWN if not isinstance(v, AArray) else v
+        if isinstance(node, ast.Compare):
+            return self._compare(node, env, module)
+        if isinstance(node, ast.BoolOp):
+            vals = [self._eval(v, env, module) for v in node.values]
+            truths = [self._truth(v) for v in vals]
+            if all(t is not None for t in truths):
+                if isinstance(node.op, ast.And):
+                    return AConst(all(truths))
+                return AConst(any(truths))
+            return UNKNOWN
+        if isinstance(node, ast.IfExp):
+            t = self._truth(self._eval(node.test, env, module))
+            if t is True:
+                return self._eval(node.body, env, module)
+            if t is False:
+                return self._eval(node.orelse, env, module)
+            return self._join(self._eval(node.body, env, module),
+                              self._eval(node.orelse, env, module))
+        if isinstance(node, (ast.ListComp, ast.GeneratorExp)):
+            return self._eval_comp(node, env, module)
+        if isinstance(node, ast.Lambda):
+            return AClosure(node, dict(env), "<lambda>", module)
+        if isinstance(node, ast.JoinedStr):
+            return AConst("<fstring>")
+        if isinstance(node, ast.Starred):
+            return self._eval(node.value, env, module)
+        return UNKNOWN
+
+    def _eval_comp(self, node, env, module) -> AVal:
+        if len(node.generators) != 1:
+            return UNKNOWN
+        gen = node.generators[0]
+        it = self._eval(gen.iter, env, module)
+        if isinstance(it, AConst) and isinstance(it.value, (range, tuple, list)):
+            it = ATuple([AConst(v) for v in it.value])
+        if not isinstance(it, ATuple) or len(it.items) > 256:
+            return UNKNOWN
+        out: list[AVal] = []
+        inner = dict(env)
+        for item in it.items:
+            self._assign(gen.target, item, inner, module)
+            keep = True
+            for cond in gen.ifs:
+                t = self._truth(self._eval(cond, inner, module))
+                if t is False:
+                    keep = False
+                    break
+                if t is None:
+                    return UNKNOWN
+            if keep:
+                out.append(self._eval(node.elt, inner, module))
+        return ATuple(out, mutable=isinstance(node, ast.ListComp))
+
+    # -- attributes --------------------------------------------------------
+    _ARRAY_METHODS = {"astype", "reshape", "sum", "copy", "transpose",
+                      "ravel", "flatten", "item", "mean", "min", "max"}
+
+    def _eval_attribute(self, node, env, module) -> AVal:
+        base = self._eval(node.value, env, module)
+        attr = node.attr
+        if isinstance(base, AFunc):
+            name = f"{base.name}.{attr}"
+            short = name.rsplit(".", 1)
+            if short[0] in ("jnp", "np") and attr in _DTYPE_NAMES:
+                dt = _DTYPE_NAMES[attr]
+                return ADType(canonicalize(dt) if short[0] == "jnp" else dt)
+            if name == "np.newaxis" or name == "jnp.newaxis":
+                return AConst(None)
+            return AFunc(name)
+        if isinstance(base, AModule):
+            return base.module.resolve(attr) or UNKNOWN
+        if isinstance(base, AArray):
+            if attr == "shape":
+                return ATuple([AInt(d) for d in base.shape])
+            if attr == "ndim":
+                return AConst(base.ndim)
+            if attr == "dtype":
+                return ADType(base.dtype)
+            if attr == "size":
+                total = Dim.const_(1)
+                for d in base.shape:
+                    total = total * d
+                return AInt(total)
+            if attr == "T":
+                return AArray(tuple(reversed(base.shape)), base.dtype)
+            if attr == "at":
+                return ABound(base, "at")
+            if attr in self._ARRAY_METHODS:
+                return ABound(base, attr)
+            return UNKNOWN
+        if isinstance(base, AAtIndexed) and attr in ("add", "set", "max",
+                                                     "min", "mul"):
+            return ABound(base, attr)
+        if isinstance(base, ATuple) and attr in ("append", "extend", "index"):
+            return ABound(base, attr)
+        if isinstance(base, AShapeDtype):
+            if attr == "shape":
+                return ATuple([AInt(d) for d in base.shape])
+            if attr == "dtype":
+                return ADType(base.dtype)
+        return UNKNOWN
+
+    # -- subscripts --------------------------------------------------------
+    def _eval_index(self, slc, env, module) -> list:
+        """Normalize an index expression into a list of index items."""
+        if isinstance(slc, ast.Tuple):
+            return [self._eval_index_item(e, env, module) for e in slc.elts]
+        return [self._eval_index_item(slc, env, module)]
+
+    def _eval_index_item(self, node, env, module):
+        if isinstance(node, ast.Slice):
+            lo = self._eval(node.lower, env, module) if node.lower else None
+            hi = self._eval(node.upper, env, module) if node.upper else None
+            step = self._eval(node.step, env, module) if node.step else None
+            return ("slice", lo, hi, step)
+        v = self._eval(node, env, module)
+        if isinstance(v, AConst) and v.value is Ellipsis:
+            return ("ellipsis",)
+        return v
+
+    def _eval_subscript(self, node, env, module) -> AVal:
+        base = self._eval(node.value, env, module)
+        if isinstance(base, (ATuple,)):
+            idx = self._eval(node.slice, env, module) \
+                if not isinstance(node.slice, ast.Slice) else None
+            if isinstance(node.slice, ast.Slice):
+                lo = self._concrete_int(self._eval(node.slice.lower, env, module)) \
+                    if node.slice.lower else None
+                hi = self._concrete_int(self._eval(node.slice.upper, env, module)) \
+                    if node.slice.upper else None
+                if (node.slice.lower is None or lo is not None) and \
+                        (node.slice.upper is None or hi is not None):
+                    return ATuple(base.items[slice(lo, hi)], base.mutable)
+                return UNKNOWN
+            i = self._concrete_int(idx)
+            if i is not None and -len(base.items) <= i < len(base.items):
+                return base.items[i]
+            return UNKNOWN
+        if isinstance(base, AConst) and isinstance(base.value, (tuple, list, dict)):
+            i = self._eval(node.slice, env, module)
+            key = i.value if isinstance(i, AConst) else self._concrete_int(i)
+            try:
+                return AConst(base.value[key])
+            except Exception:
+                return UNKNOWN
+        if isinstance(base, ABound) and base.attr == "at":
+            items = self._eval_index(node.slice, env, module)
+            region = self._index_shape(base.base, items, node)
+            if region is None:
+                return UNKNOWN
+            return AAtIndexed(base.base, region)
+        if isinstance(base, AArray):
+            items = self._eval_index(node.slice, env, module)
+            region = self._index_shape(base, items, node)
+            if region is None:
+                return UNKNOWN
+            if not region:
+                # fully indexed → 0-d; int arrays yield symbolic ints so
+                # index_map results stay checkable
+                if base.dtype.kind in ("int", "uint"):
+                    return AInt(_fresh("elt"))
+                return AArray((), base.dtype)
+            return AArray(region, base.dtype)
+        return UNKNOWN
+
+    def _index_shape(self, base: AArray, items: list, node) -> tuple | None:
+        """Result shape of indexing `base` with `items` (read semantics);
+        None = unmodeled index."""
+        # expand ellipsis
+        n_consuming = sum(1 for it in items
+                          if not (isinstance(it, AConst) and it.value is None)
+                          and not (isinstance(it, tuple) and it[0] == "ellipsis"))
+        out: list = []
+        pos = 0
+        expanded: list = []
+        for it in items:
+            if isinstance(it, tuple) and it[0] == "ellipsis":
+                expanded.extend([("slice", None, None, None)]
+                                * (base.ndim - n_consuming))
+            else:
+                expanded.append(it)
+        while len([i for i in expanded
+                   if not (isinstance(i, AConst) and i.value is None)]) \
+                < base.ndim:
+            expanded.append(("slice", None, None, None))
+        for it in expanded:
+            if isinstance(it, AConst) and it.value is None:
+                out.append(Dim.const_(1))
+                continue
+            if pos >= base.ndim:
+                return None
+            dim = base.shape[pos]
+            pos += 1
+            if isinstance(it, tuple) and it[0] == "slice":
+                _, lo, hi, step = it
+                if step is not None:
+                    out.append(_fresh("strided"))
+                    continue
+                lo_d = as_dim(lo) if lo is not None else Dim.const_(0)
+                hi_d = as_dim(hi) if hi is not None else dim
+                if lo_d is None or hi_d is None:
+                    out.append(_fresh("slice"))
+                elif lo_d == Dim.const_(0):
+                    out.append(hi_d if not hi_d.is_const or not dim.is_const
+                               else Dim.const_(min(hi_d.const, dim.const))
+                               if hi_d.const >= 0 else _fresh("slice"))
+                else:
+                    delta = hi_d - lo_d
+                    out.append(delta if not delta.has_opaque
+                               else _fresh("slice"))
+                continue
+            if isinstance(it, AArray):
+                # advanced integer index: its dims splice in here
+                out.extend(it.shape)
+                continue
+            if as_dim(it) is not None or isinstance(it, AUnknown):
+                continue  # scalar index: drops the axis
+            return None
+        return tuple(out)
+
+    # -- operators ---------------------------------------------------------
+    def _binop(self, lv: AVal, op, rv: AVal, node) -> AVal:
+        if isinstance(lv, AConst) and isinstance(rv, AConst):
+            try:
+                return AConst(_PYOPS[type(op)](lv.value, rv.value))
+            except Exception:
+                return UNKNOWN
+        ld, rd = as_dim(lv), as_dim(rv)
+        if ld is not None and rd is not None \
+                and not isinstance(lv, AArray) and not isinstance(rv, AArray):
+            if isinstance(op, ast.Add):
+                return AInt(ld + rd)
+            if isinstance(op, ast.Sub):
+                return AInt(ld - rd)
+            if isinstance(op, ast.Mult):
+                return AInt(ld * rd)
+            if isinstance(op, ast.FloorDiv):
+                return AInt(ld // rd)
+            if isinstance(op, ast.Mod):
+                return AInt(ld % rd)
+            return UNKNOWN
+        if isinstance(lv, AArray) or isinstance(rv, AArray):
+            return self._array_binop(lv, op, rv, node)
+        return UNKNOWN
+
+    def _array_binop(self, lv, op, rv, node) -> AVal:
+        def coerce(v):
+            if isinstance(v, AArray):
+                return v
+            if isinstance(v, AInt):
+                return AArray((), DType("int", 32, weak=True))
+            if isinstance(v, AConst) and isinstance(v.value, bool):
+                return AArray((), DType("bool", 8, weak=True))
+            if isinstance(v, AConst) and isinstance(v.value, int):
+                return AArray((), DType("int", 32, weak=True))
+            if isinstance(v, AConst) and isinstance(v.value, float):
+                return AArray((), DType("float", 32, weak=True))
+            return None
+        la, ra = coerce(lv), coerce(rv)
+        if la is None or ra is None:
+            return UNKNOWN
+        shape = self._broadcast(la.shape, ra.shape, node)
+        if isinstance(op, (ast.LShift, ast.RShift)):
+            return AArray(shape, la.dtype if isinstance(lv, AArray)
+                          else ra.dtype)
+        dt = promote(la.dtype, ra.dtype)
+        if isinstance(op, (ast.Div,)):
+            dt = DType("float", 32) if dt.kind != "float" else dt
+        return AArray(shape, dt)
+
+    def _broadcast(self, sa: tuple, sb: tuple, node,
+                   what: str = "operands") -> tuple:
+        out: list = []
+        la, lb = len(sa), len(sb)
+        for i in range(max(la, lb)):
+            a = sa[la - 1 - i] if i < la else Dim.const_(1)
+            b = sb[lb - 1 - i] if i < lb else Dim.const_(1)
+            if a == b:
+                out.append(a)
+            elif a == Dim.const_(1):
+                out.append(b)
+            elif b == Dim.const_(1):
+                out.append(a)
+            elif a.has_opaque or b.has_opaque:
+                out.append(_fresh("bcast"))
+            else:
+                self.problem(
+                    node, f"shape mismatch broadcasting {what}: "
+                    f"{_shape_str(sa)} vs {_shape_str(sb)} "
+                    f"(dim {a} vs {b})")
+                out.append(_fresh("bcast"))
+        return tuple(reversed(out))
+
+    def _compare(self, node, env, module) -> AVal:
+        if len(node.ops) != 1:
+            return UNKNOWN
+        lv = self._eval(node.left, env, module)
+        rv = self._eval(node.comparators[0], env, module)
+        op = node.ops[0]
+        if isinstance(op, (ast.Is, ast.IsNot)):
+            def known_none(v):
+                if isinstance(v, AConst):
+                    return v.value is None
+                if isinstance(v, (AArray, ATuple, AInt, ADType, AClosure)):
+                    return False
+                return None
+            ln, rn = known_none(lv), known_none(rv)
+            if isinstance(rv, AConst) and rv.value is None and ln is not None:
+                return AConst(ln if isinstance(op, ast.Is) else not ln)
+            if isinstance(lv, AConst) and lv.value is None and rn is not None:
+                return AConst(rn if isinstance(op, ast.Is) else not rn)
+            return UNKNOWN
+        if isinstance(lv, AConst) and isinstance(rv, AConst):
+            try:
+                return AConst(_PYCMP[type(op)](lv.value, rv.value))
+            except Exception:
+                return UNKNOWN
+        li, ri = self._concrete_int(lv), self._concrete_int(rv)
+        if li is not None and ri is not None:
+            return AConst(_PYCMP[type(op)](li, ri))
+        if isinstance(lv, AArray) or isinstance(rv, AArray):
+            la = lv if isinstance(lv, AArray) else AArray((), _INT32)
+            ra = rv if isinstance(rv, AArray) else AArray((), _INT32)
+            shape = self._broadcast(la.shape, ra.shape, node,
+                                    what="comparison operands")
+            return AArray(shape, DType("bool", 8))
+        return UNKNOWN
+
+    # -- calls -------------------------------------------------------------
+    def _eval_call(self, node, env, module) -> AVal:
+        func = self._eval(node.func, env, module)
+        args: list[AVal] = []
+        for a in node.args:
+            if isinstance(a, ast.Starred):
+                v = self._eval(a.value, env, module)
+                if isinstance(v, ATuple):
+                    args.extend(v.items)
+                else:
+                    args.append(UNKNOWN)
+            else:
+                args.append(self._eval(a, env, module))
+        kwargs: dict[str, AVal] = {}
+        for kw in node.keywords:
+            if kw.arg is None:
+                continue
+            kwargs[kw.arg] = self._eval(kw.value, env, module)
+        return self._call(func, args, kwargs, node)
+
+    def _call(self, func: AVal, args: list, kwargs: dict, node) -> AVal:
+        if isinstance(func, AClosure):
+            return self._call_closure(func, args, kwargs, node)
+        if isinstance(func, APartial):
+            merged_kwargs = dict(func.kwargs)
+            merged_kwargs.update(kwargs)
+            return self._call(func.func, list(func.args) + args,
+                              merged_kwargs, node)
+        if isinstance(func, ABound):
+            return self._call_method(func, args, kwargs, node)
+        if isinstance(func, ADType):
+            return AArray((), func.dtype)
+        if isinstance(func, APallasCall):
+            return self._run_pallas(func, args, node)
+        if isinstance(func, AFunc):
+            handler = _PRIMITIVES.get(func.name)
+            if handler is not None:
+                return handler(self, func, args, kwargs, node)
+            return UNKNOWN
+        return UNKNOWN
+
+    def _call_closure(self, c: AClosure, args, kwargs, node) -> AVal:
+        fn = c.node
+        if isinstance(fn, ast.Lambda):
+            env = dict(c.env)
+            a = fn.args
+            names = [p.arg for p in a.posonlyargs + a.args]
+            for i, name in enumerate(names):
+                if i < len(args):
+                    env[name] = args[i]
+                elif name in kwargs:
+                    env[name] = kwargs[name]
+            defaults = a.defaults
+            for i, d in enumerate(defaults):
+                name = names[len(names) - len(defaults) + i]
+                if name not in env:
+                    env[name] = self._eval(d, dict(c.env), c.module)
+            for name in names:
+                env.setdefault(name, UNKNOWN)
+            self._depth += 1
+            self._rel_stack.append(c.module.rel)
+            try:
+                if self._depth > self.max_depth:
+                    return UNKNOWN
+                return self._eval(fn.body, env, c.module)
+            finally:
+                self._rel_stack.pop()
+                self._depth -= 1
+        return self.call_function(fn, c.module, args, dict(kwargs))
+
+    def _call_method(self, bound: ABound, args, kwargs, node) -> AVal:
+        base, attr = bound.base, bound.attr
+        if isinstance(base, AArray):
+            if attr == "astype":
+                dt = args[0] if args else kwargs.get("dtype")
+                if isinstance(dt, ADType):
+                    return AArray(base.shape, dt.dtype)
+                return AArray(base.shape, base.dtype)
+            if attr == "reshape":
+                shape_args = (args[0].items
+                              if len(args) == 1 and isinstance(args[0], ATuple)
+                              else args)
+                return self._reshape(base, shape_args, node)
+            if attr in ("copy", "ravel", "flatten"):
+                if attr == "copy":
+                    return base
+                total = Dim.const_(1)
+                for d in base.shape:
+                    total = total * d
+                return AArray((total,), base.dtype)
+            if attr in ("sum", "mean", "min", "max"):
+                return UNKNOWN
+            return UNKNOWN
+        if isinstance(base, AAtIndexed):
+            if args:
+                self._check_store(base.base, base.index_shape, args[0], node)
+            return base.base
+        if isinstance(base, ATuple):
+            if attr == "append" and base.mutable and args:
+                base.items.append(args[0])
+                return AConst(None)
+            if attr == "extend" and base.mutable and args \
+                    and isinstance(args[0], ATuple):
+                base.items.extend(args[0].items)
+                return AConst(None)
+            return UNKNOWN
+        return UNKNOWN
+
+    def _reshape(self, base: AArray, shape_args: list, node) -> AVal:
+        total = Dim.const_(1)
+        for d in base.shape:
+            total = total * d
+        dims: list[Dim | None] = []
+        hole = None
+        for i, a in enumerate(shape_args):
+            v = self._concrete_int(a)
+            if v == -1:
+                hole = i
+                dims.append(None)
+                continue
+            d = as_dim(a)
+            dims.append(d if d is not None else _fresh("reshape"))
+        if hole is not None:
+            known = Dim.const_(1)
+            for d in dims:
+                if d is not None:
+                    known = known * d
+            rem = _try_exact_div(total, known)
+            dims[hole] = rem if rem is not None else _fresh("reshape")
+        return AArray(tuple(dims), base.dtype)
+
+    # -- pallas ------------------------------------------------------------
+    def _run_pallas(self, pc: APallasCall, operands: list, node) -> AVal:
+        gs = pc.grid_spec
+        out_shapes = (pc.out_shape.items
+                      if isinstance(pc.out_shape, ATuple)
+                      else [pc.out_shape])
+        out_shapes = [o for o in out_shapes if isinstance(o, AShapeDtype)]
+        if not isinstance(gs, AGridSpec):
+            return (AArray(out_shapes[0].shape, out_shapes[0].dtype)
+                    if out_shapes else UNKNOWN)
+        nsp = gs.num_scalar_prefetch
+        grid = gs.grid.items if isinstance(gs.grid, ATuple) else []
+        in_specs = gs.in_specs.items if isinstance(gs.in_specs, ATuple) else []
+        data_ops = operands[nsp:]
+        if len(in_specs) != len(data_ops):
+            self.problem(
+                node, f"pallas_call got {len(data_ops)} data operand(s) "
+                f"after {nsp} scalar-prefetch arg(s) but the grid spec "
+                f"declares {len(in_specs)} in_spec(s)", category="pallas")
+            return (AArray(out_shapes[0].shape, out_shapes[0].dtype)
+                    if out_shapes else UNKNOWN)
+        refs: list[AVal] = list(operands[:nsp])
+        for spec, op in zip(in_specs, data_ops):
+            refs.append(self._check_spec(spec, op, len(grid), nsp,
+                                         operands[:nsp], node, "in_spec"))
+        out_specs = (gs.out_specs.items
+                     if isinstance(gs.out_specs, ATuple) else [gs.out_specs])
+        out_refs: list[AVal] = []
+        for spec, osd in zip(out_specs, out_shapes):
+            op = AArray(osd.shape, osd.dtype)
+            out_refs.append(self._check_spec(spec, op, len(grid), nsp,
+                                             operands[:nsp], node, "out_spec"))
+        kernel = pc.kernel
+        if isinstance(kernel, (AClosure, APartial)):
+            self._call(kernel, refs + out_refs, {}, node)
+        if out_shapes:
+            result = [AArray(o.shape, o.dtype) for o in out_shapes]
+            return result[0] if len(result) == 1 else ATuple(result)
+        return UNKNOWN
+
+    def _check_spec(self, spec, op, n_grid, nsp, prefetch, node,
+                    what: str) -> AVal:
+        if not isinstance(spec, ABlockSpec) or not isinstance(op, AArray):
+            return op if isinstance(op, AArray) else UNKNOWN
+        bs = spec.block_shape
+        bdims_v = bs.items if isinstance(bs, ATuple) else None
+        if bdims_v is None:
+            return op
+        bdims = [as_dim(v) for v in bdims_v]
+        line = spec.line or node
+        if len(bdims) != op.ndim:
+            self.problem(
+                line, f"BlockSpec {what} has rank {len(bdims)} but the "
+                f"operand is rank {op.ndim} ({_shape_str(op.shape)})",
+                category="pallas")
+            return op
+        for i, (b, o) in enumerate(zip(bdims, op.shape)):
+            if b is None or b.has_opaque or o.has_opaque:
+                continue
+            if not o.divisible_by(b):
+                self.problem(
+                    line, f"BlockSpec {what} dim {i}: block size {b} does "
+                    f"not evenly divide operand dim {o} — the grid would "
+                    "read a ragged final block", category="pallas")
+        im = spec.index_map
+        if isinstance(im, (AClosure, APartial)):
+            arity = _callable_arity(im)
+            want = n_grid + nsp
+            if arity is not None and not (arity[0] <= want <= arity[1]):
+                self.problem(
+                    line, f"BlockSpec {what} index_map takes "
+                    f"{arity[0]}..{arity[1]} arg(s) but the grid supplies "
+                    f"{want} (grid rank {n_grid} + {nsp} scalar-prefetch)",
+                    category="pallas")
+            else:
+                idx_args = [AInt(_fresh("grid")) for _ in range(n_grid)]
+                res = self._call(im, idx_args + list(prefetch), {}, node)
+                if isinstance(res, ATuple) and len(res.items) != len(bdims):
+                    self.problem(
+                        line, f"BlockSpec {what} index_map returns "
+                        f"{len(res.items)} indices for a rank-{len(bdims)} "
+                        "block", category="pallas")
+        block_dims = [d if d is not None else _fresh("block") for d in bdims]
+        return AArray(tuple(block_dims), op.dtype)
+
+
+def _callable_arity(f) -> tuple[int, int] | None:
+    while isinstance(f, APartial):
+        inner = _callable_arity(f.func)
+        if inner is None:
+            return None
+        return (max(0, inner[0] - len(f.args)), inner[1] - len(f.args))
+    if isinstance(f, AClosure):
+        a = f.node.args
+        names = a.posonlyargs + a.args
+        return (len(names) - len(a.defaults), len(names))
+    return None
+
+
+_PYOPS = {
+    ast.Add: lambda a, b: a + b, ast.Sub: lambda a, b: a - b,
+    ast.Mult: lambda a, b: a * b, ast.Div: lambda a, b: a / b,
+    ast.FloorDiv: lambda a, b: a // b, ast.Mod: lambda a, b: a % b,
+    ast.Pow: lambda a, b: a ** b, ast.LShift: lambda a, b: a << b,
+    ast.RShift: lambda a, b: a >> b, ast.BitOr: lambda a, b: a | b,
+    ast.BitAnd: lambda a, b: a & b, ast.BitXor: lambda a, b: a ^ b,
+}
+
+_PYCMP = {
+    ast.Eq: lambda a, b: a == b, ast.NotEq: lambda a, b: a != b,
+    ast.Lt: lambda a, b: a < b, ast.LtE: lambda a, b: a <= b,
+    ast.Gt: lambda a, b: a > b, ast.GtE: lambda a, b: a >= b,
+    ast.In: lambda a, b: a in b, ast.NotIn: lambda a, b: a not in b,
+}
+
+
+# ---------------------------------------------------------------------------
+# Primitive models
+# ---------------------------------------------------------------------------
+
+def _shape_from(v: AVal) -> tuple | None:
+    if isinstance(v, ATuple):
+        dims = [as_dim(i) for i in v.items]
+        if all(d is not None for d in dims):
+            return tuple(dims)
+        return tuple(d if d is not None else _fresh("shape") for d in dims)
+    d = as_dim(v)
+    if d is not None:
+        return (d,)
+    return None
+
+
+def _dtype_from(v: AVal | None, default: DType) -> DType:
+    if isinstance(v, ADType):
+        return v.dtype
+    return default
+
+
+def _p_zeros(self, func, args, kwargs, node):
+    shape = _shape_from(args[0]) if args else None
+    dt = _dtype_from(args[1] if len(args) > 1 else kwargs.get("dtype"), _F32)
+    if shape is None:
+        return UNKNOWN
+    return AArray(shape, dt)
+
+
+def _p_asarray(self, func, args, kwargs, node):
+    if not args:
+        return UNKNOWN
+    v = args[0]
+    dt_arg = args[1] if len(args) > 1 else kwargs.get("dtype")
+    if isinstance(v, AArray):
+        dt = _dtype_from(dt_arg, v.dtype)
+        return AArray(v.shape, canonicalize(dt) if func.name.startswith("jnp")
+                      else dt)
+    if isinstance(v, ATuple):
+        dims = [as_dim(i) for i in v.items]
+        if all(d is not None for d in dims):
+            dt = _dtype_from(dt_arg, _INT32)
+            return AArray((Dim.const_(len(dims)),), dt)
+    d = as_dim(v)
+    if d is not None:
+        return AArray((), _dtype_from(dt_arg, DType("int", 32, weak=True)))
+    return UNKNOWN
+
+
+def _p_arange(self, func, args, kwargs, node):
+    if len(args) == 1:
+        d = as_dim(args[0])
+        if d is not None:
+            return AArray((d,), _dtype_from(kwargs.get("dtype"), _INT32))
+    if len(args) == 2:
+        lo, hi = as_dim(args[0]), as_dim(args[1])
+        if lo is not None and hi is not None:
+            return AArray((hi - lo,), _dtype_from(kwargs.get("dtype"), _INT32))
+    return UNKNOWN
+
+
+def _p_pad(self, func, args, kwargs, node):
+    if len(args) < 2 or not isinstance(args[0], AArray):
+        return UNKNOWN
+    arr, spec = args[0], args[1]
+    if not isinstance(spec, ATuple):
+        return UNKNOWN
+    pads = []
+    for item in spec.items:
+        if isinstance(item, ATuple) and len(item.items) == 2:
+            lo, hi = as_dim(item.items[0]), as_dim(item.items[1])
+            if lo is None or hi is None:
+                return UNKNOWN
+            pads.append((lo, hi))
+        else:
+            return UNKNOWN
+    if len(pads) != arr.ndim:
+        self.problem(node, f"jnp.pad gives {len(pads)} pad pairs for a "
+                           f"rank-{arr.ndim} array")
+        return UNKNOWN
+    shape = tuple(d + lo + hi for d, (lo, hi) in zip(arr.shape, pads))
+    return AArray(shape, arr.dtype)
+
+
+def _p_dot(self, func, args, kwargs, node):
+    if len(args) < 2 or not isinstance(args[0], AArray) \
+            or not isinstance(args[1], AArray):
+        return UNKNOWN
+    a, b = args[0], args[1]
+    if a.ndim == 0 or b.ndim == 0:
+        return UNKNOWN
+    ka = a.shape[-1]
+    kb = b.shape[-2] if b.ndim >= 2 else b.shape[0]
+    if not (ka.has_opaque or kb.has_opaque) and ka != kb:
+        self.problem(node, f"jnp.dot contraction mismatch: "
+                           f"{_shape_str(a.shape)} · {_shape_str(b.shape)} "
+                           f"(contracting dim {ka} vs {kb})")
+    out = a.shape[:-1] + (b.shape[:-2] + b.shape[-1:] if b.ndim >= 2 else ())
+    dt = _dtype_from(kwargs.get("preferred_element_type"),
+                     promote(a.dtype, b.dtype))
+    return AArray(out, dt)
+
+
+def _p_take_along_axis(self, func, args, kwargs, node):
+    if len(args) < 2 or not isinstance(args[0], AArray) \
+            or not isinstance(args[1], AArray):
+        return UNKNOWN
+    arr, idx = args[0], args[1]
+    axis = self._concrete_int(args[2] if len(args) > 2 else kwargs.get("axis"))
+    if axis is None or arr.ndim != idx.ndim:
+        if axis is not None and arr.ndim != idx.ndim:
+            self.problem(node, "jnp.take_along_axis needs equal ranks: "
+                               f"{_shape_str(arr.shape)} vs "
+                               f"{_shape_str(idx.shape)}")
+        return UNKNOWN
+    axis = axis % arr.ndim
+    out = []
+    for i in range(arr.ndim):
+        if i == axis:
+            out.append(idx.shape[i])
+        else:
+            a, b = arr.shape[i], idx.shape[i]
+            if a == b or b == Dim.const_(1):
+                out.append(a)
+            elif a == Dim.const_(1):
+                out.append(b)
+            elif a.has_opaque or b.has_opaque:
+                out.append(_fresh("taa"))
+            else:
+                self.problem(node, "jnp.take_along_axis non-axis dim "
+                                   f"{i} mismatch: {a} vs {b}")
+                out.append(_fresh("taa"))
+    return AArray(tuple(out), arr.dtype)
+
+
+def _p_elementwise(self, func, args, kwargs, node):
+    arrays = [a for a in args if isinstance(a, AArray)]
+    if not arrays:
+        return UNKNOWN
+    shape = arrays[0].shape
+    dt = arrays[0].dtype
+    for other in arrays[1:]:
+        shape = self._broadcast(shape, other.shape, node,
+                                what=func.name.split(".")[-1] + " operands")
+        dt = promote(dt, other.dtype)
+    return AArray(shape, dt)
+
+
+def _p_shift(self, func, args, kwargs, node):
+    if args and isinstance(args[0], AArray):
+        return args[0]
+    return UNKNOWN
+
+
+def _p_segment_sum(self, func, args, kwargs, node):
+    if len(args) < 2 or not isinstance(args[0], AArray) \
+            or not isinstance(args[1], AArray):
+        return UNKNOWN
+    data, ids = args[0], args[1]
+    ns = kwargs.get("num_segments",
+                    args[2] if len(args) > 2 else None)
+    ns_dim = as_dim(ns) if ns is not None else None
+    sorted_flag = False
+    s = kwargs.get("indices_are_sorted")
+    if isinstance(s, AConst):
+        sorted_flag = bool(s.value)
+    self.segment_sums.append(SegmentSum(
+        line=getattr(node, "lineno", 0), data_shape=data.shape,
+        ids_shape=ids.shape, num_segments=ns_dim,
+        indices_are_sorted=sorted_flag, rel=self.current_rel))
+    if ids.ndim >= 1 and data.ndim >= 1:
+        a, b = data.shape[0], ids.shape[0]
+        if not (a.has_opaque or b.has_opaque) and a != b:
+            self.problem(node, "segment_sum data/segment_ids leading dims "
+                               f"differ: {a} vs {b}")
+    lead = (ns_dim,) if ns_dim is not None else (_fresh("segments"),)
+    return AArray(lead + data.shape[ids.ndim:], data.dtype)
+
+
+def _p_vmap(self, func, args, kwargs, node):
+    if args:
+        return AFunc("jax.vmap#mapped", payload=(args[0],))
+    return UNKNOWN
+
+
+def _p_vmapped(self, func, args, kwargs, node):
+    target = func.payload[0]
+    arrays = [a for a in args if isinstance(a, AArray) and a.ndim >= 1]
+    if not arrays:
+        return UNKNOWN
+    lead = arrays[0].shape[0]
+    for other in arrays[1:]:
+        j = join_dims(lead, other.shape[0])
+        if j is None and not (lead.has_opaque or other.shape[0].has_opaque):
+            self.problem(node, "jax.vmap operands disagree on the mapped "
+                               f"axis: {lead} vs {other.shape[0]}")
+        lead = j if j is not None else lead
+    inner = [AArray(a.shape[1:], a.dtype) if isinstance(a, AArray)
+             and a.ndim >= 1 else a for a in args]
+    res = self._call(target, inner, {}, node)
+    if isinstance(res, AArray):
+        return AArray((lead,) + res.shape, res.dtype)
+    if isinstance(res, ATuple):
+        return ATuple([AArray((lead,) + r.shape, r.dtype)
+                       if isinstance(r, AArray) else UNKNOWN
+                       for r in res.items])
+    return UNKNOWN
+
+
+def _p_iota(self, func, args, kwargs, node):
+    if len(args) >= 2:
+        dt = _dtype_from(args[0], _INT32)
+        shape = _shape_from(args[1])
+        if shape is not None:
+            return AArray(shape, dt)
+    return UNKNOWN
+
+
+def _p_partial(self, func, args, kwargs, node):
+    if not args:
+        return UNKNOWN
+    return APartial(args[0], args[1:], dict(kwargs))
+
+
+def _p_shape_dtype(self, func, args, kwargs, node):
+    shape = _shape_from(args[0] if args else kwargs.get("shape"))
+    dt = _dtype_from(args[1] if len(args) > 1 else kwargs.get("dtype"), _F32)
+    if shape is None:
+        return UNKNOWN
+    return AShapeDtype(shape, dt)
+
+
+def _p_blockspec(self, func, args, kwargs, node):
+    bs = args[0] if args else kwargs.get("block_shape", UNKNOWN)
+    im = args[1] if len(args) > 1 else kwargs.get("index_map", UNKNOWN)
+    return ABlockSpec(bs, im, getattr(node, "lineno", 0))
+
+
+def _p_gridspec(self, func, args, kwargs, node):
+    nsp = self._concrete_int(kwargs.get("num_scalar_prefetch", AConst(0)))
+    return AGridSpec(
+        grid=kwargs.get("grid", UNKNOWN),
+        in_specs=kwargs.get("in_specs", UNKNOWN),
+        out_specs=kwargs.get("out_specs", UNKNOWN),
+        num_scalar_prefetch=nsp if nsp is not None else 0,
+        line=getattr(node, "lineno", 0))
+
+
+def _p_pallas_call(self, func, args, kwargs, node):
+    return APallasCall(
+        kernel=args[0] if args else UNKNOWN,
+        grid_spec=kwargs.get("grid_spec", UNKNOWN),
+        out_shape=kwargs.get("out_shape", UNKNOWN),
+        line=getattr(node, "lineno", 0))
+
+
+def _p_len(self, func, args, kwargs, node):
+    if args and isinstance(args[0], ATuple):
+        return AConst(len(args[0].items))
+    if args and isinstance(args[0], AConst) and \
+            isinstance(args[0].value, (tuple, list, str, range)):
+        return AConst(len(args[0].value))
+    return UNKNOWN
+
+
+def _p_range(self, func, args, kwargs, node):
+    vals = [self._concrete_int(a) for a in args]
+    if all(v is not None for v in vals) and vals:
+        return ATuple([AConst(v) for v in range(*vals)])
+    return UNKNOWN
+
+
+def _as_atuple(v: AVal) -> ATuple | None:
+    if isinstance(v, ATuple):
+        return v
+    if isinstance(v, AConst) and isinstance(v.value, (tuple, list, range)):
+        return ATuple([AConst(x) for x in v.value])
+    return None
+
+
+def _p_enumerate(self, func, args, kwargs, node):
+    it = _as_atuple(args[0]) if args else None
+    if it is not None:
+        return ATuple([ATuple([AConst(i), v])
+                       for i, v in enumerate(it.items)])
+    return UNKNOWN
+
+
+def _p_zip(self, func, args, kwargs, node):
+    cols = []
+    for a in args:
+        t = _as_atuple(a)
+        if t is None:
+            return UNKNOWN
+        cols.append(t.items)
+    return ATuple([ATuple(list(row)) for row in zip(*cols)])
+
+
+def _p_reversed(self, func, args, kwargs, node):
+    it = _as_atuple(args[0]) if args else None
+    if it is not None:
+        return ATuple(list(reversed(it.items)))
+    return UNKNOWN
+
+
+def _p_tuple(self, func, args, kwargs, node):
+    if not args:
+        return ATuple([], mutable=func.name == "builtin.list")
+    it = _as_atuple(args[0])
+    if it is not None:
+        return ATuple(list(it.items),
+                      mutable=func.name == "builtin.list")
+    return UNKNOWN
+
+
+def _p_minmax(self, func, args, kwargs, node):
+    vals = [self._concrete_int(a) for a in args]
+    if len(args) >= 2 and all(v is not None for v in vals):
+        f = max if func.name.endswith("max") else min
+        return AConst(f(*vals))
+    # symbolic max/min: no algebra; pass through a single unambiguous arg
+    if len(args) == 2:
+        da, db = as_dim(args[0]), as_dim(args[1])
+        if da is not None and da == db:
+            return AInt(da)
+    return UNKNOWN
+
+
+def _p_int(self, func, args, kwargs, node):
+    if args:
+        v = self._concrete_int(args[0])
+        if v is not None:
+            return AConst(v)
+        d = as_dim(args[0])
+        if d is not None:
+            return AInt(d)
+    return UNKNOWN
+
+
+def _p_jit(self, func, args, kwargs, node):
+    return args[0] if args else UNKNOWN
+
+
+def _p_identity_array(self, func, args, kwargs, node):
+    if args and isinstance(args[0], AArray):
+        return args[0]
+    return UNKNOWN
+
+
+_PRIMITIVES = {
+    "jnp.zeros": _p_zeros, "jnp.ones": _p_zeros, "jnp.empty": _p_zeros,
+    "jnp.full": _p_zeros,
+    "jnp.asarray": _p_asarray, "jnp.array": _p_asarray,
+    "np.asarray": _p_asarray, "np.array": _p_asarray,
+    "jnp.arange": _p_arange,
+    "jnp.pad": _p_pad,
+    "jnp.dot": _p_dot, "jnp.matmul": _p_dot,
+    "jnp.take_along_axis": _p_take_along_axis,
+    "jnp.minimum": _p_elementwise, "jnp.maximum": _p_elementwise,
+    "jnp.where": _p_elementwise, "jnp.clip": _p_elementwise,
+    "jnp.add": _p_elementwise, "jnp.multiply": _p_elementwise,
+    "jnp.right_shift": _p_shift, "jnp.left_shift": _p_shift,
+    "lax.shift_right_arithmetic": _p_shift,
+    "lax.shift_right_logical": _p_shift, "lax.shift_left": _p_shift,
+    "jnp.round": _p_identity_array, "jnp.abs": _p_identity_array,
+    "jnp.exp": _p_identity_array, "jnp.sqrt": _p_identity_array,
+    "lax.broadcasted_iota": _p_iota,
+    "jax.ops.segment_sum": _p_segment_sum,
+    "jax.vmap": _p_vmap, "jax.vmap#mapped": _p_vmapped,
+    "jax.jit": _p_jit,
+    "jax.ShapeDtypeStruct": _p_shape_dtype,
+    "pl.BlockSpec": _p_blockspec,
+    "pltpu.PrefetchScalarGridSpec": _p_gridspec,
+    "pl.pallas_call": _p_pallas_call,
+    "functools.partial": _p_partial,
+    "builtin.len": _p_len, "builtin.range": _p_range,
+    "builtin.enumerate": _p_enumerate, "builtin.zip": _p_zip,
+    "builtin.reversed": _p_reversed, "builtin.tuple": _p_tuple,
+    "builtin.list": _p_tuple, "builtin.max": _p_minmax,
+    "builtin.min": _p_minmax, "builtin.int": _p_int,
+}

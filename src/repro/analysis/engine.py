@@ -99,6 +99,9 @@ class RuleSpec:
 
     scope      — "file" (per-file AST pass), "project" (whole-repo
                  invariant), or "meta" (engine-built-in).
+    tier       — "syntactic" (cheap per-node passes, every PR) or
+                 "dataflow" (abstract-interpretation passes; same CI job,
+                 separate timed step).  Meta rules ignore tier.
     packages   — repo-relative path prefixes a file rule walks; () means
                  the engine default (`DEFAULT_FILE_TARGETS`).
     rationale  — why the rule exists (rendered into docs/static-analysis.md
@@ -109,6 +112,7 @@ class RuleSpec:
     name: str
     check: Callable | None
     scope: str = "file"
+    tier: str = "syntactic"
     packages: tuple[str, ...] = ()
     description: str = ""
     rationale: str = ""
@@ -124,6 +128,7 @@ def register_rule(
     name: str,
     *,
     scope: str = "file",
+    tier: str = "syntactic",
     packages: tuple[str, ...] = (),
     description: str = "",
     rationale: str = "",
@@ -138,10 +143,13 @@ def register_rule(
             "in suppression comments and docs anchors")
     if scope not in ("file", "project", "meta"):
         raise ValueError(f"unknown rule scope {scope!r}")
+    if tier not in ("syntactic", "dataflow"):
+        raise ValueError(f"unknown rule tier {tier!r}")
 
     def deco(check: Callable | None) -> Callable | None:
         _RULES[name] = RuleSpec(
-            name=name, check=check, scope=scope, packages=tuple(packages),
+            name=name, check=check, scope=scope, tier=tier,
+            packages=tuple(packages),
             description=description, rationale=rationale, example=example)
         return check
     return deco
@@ -392,18 +400,27 @@ def run_analysis(
     root: str | os.PathLike | None = None,
     *,
     rules: Iterable[str] | None = None,
+    tier: str = "all",
     strict: bool = False,
 ) -> AnalysisResult:
     """Run the registered passes over the repo at `root`.
 
     `rules` restricts to a subset of rule ids (meta checks always run);
-    `strict` additionally enforces suppression hygiene: unknown rule ids in
-    suppression comments, suppressions without a reason string, and
-    suppressions that no longer match any finding all become findings.
+    `tier` restricts to one rule tier ("syntactic" | "dataflow" | "all") so
+    CI can time the cheap per-node passes and the abstract-interpretation
+    passes as separate steps; `strict` additionally enforces suppression
+    hygiene: unknown rule ids in suppression comments, suppressions without
+    a reason string, and suppressions that no longer match any finding all
+    become findings.
     """
+    if tier not in ("syntactic", "dataflow", "all"):
+        raise ValueError(f"unknown tier {tier!r}")
     root = Path(root) if root is not None else default_root()
     selected = (registered_rules() if rules is None
                 else {n: get_rule(n) for n in rules})
+    if tier != "all":
+        selected = {n: s for n, s in selected.items()
+                    if s.tier == tier or s.scope == "meta"}
     project = ProjectContext(root)
 
     raw: list[Finding] = []
@@ -476,6 +493,11 @@ def run_analysis(
     unused = [s for s in suppressions if s not in used]
     if strict:
         for s in unused:
+            # Only judge a waiver against rules that actually ran this
+            # pass: under `--rules`/`--tier` subsets a suppression for an
+            # unselected rule cannot match anything and is not stale.
+            if not any(r in selected for r in s.rules):
+                continue
             # A waiver matching nothing is a stale disable: either the code
             # was fixed (delete the comment) or the rule id drifted.
             active.append(Finding(

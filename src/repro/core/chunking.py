@@ -115,7 +115,22 @@ def chunk_tensor(
     assert cs.shape == (n,) and np.all(cs >= 1)
     grid = tuple(int(-(-i // s)) for i, s in zip(st.shape, cs, strict=True))
 
-    chunk_coord = st.coords // cs.astype(np.int32)  # (nnz, N)
+    # Device-side coordinates (coords_rel, task_chunk, and every row index
+    # derived from them as task_chunk * chunk_shape + local) are jnp.int32,
+    # while all host arithmetic here is np.int64.  Refuse to chunk anything
+    # whose padded per-mode extent the device could not address.
+    for m, (g, s) in enumerate(zip(grid, cs, strict=True)):
+        if g * int(s) - 1 > np.iinfo(np.int32).max:
+            raise ValueError(
+                f"mode {m}: padded extent {g * int(s)} (grid {g} x chunk "
+                f"{int(s)}) exceeds int32 — device coordinates are jnp.int32; "
+                "use a smaller chunk_shape or split the mode")
+    if math.prod(grid) >= 1 << 62:
+        raise ValueError(
+            f"chunk grid {grid} linearizes past int64; coarsen chunk_shape")
+    cs32 = cs.astype(np.int32)
+
+    chunk_coord = st.coords // cs32  # (nnz, N)
     # Linearize chunk coordinates to group nonzeros by chunk.
     lin = np.zeros(st.nnz, dtype=np.int64)
     for m in range(n):
@@ -154,7 +169,7 @@ def chunk_tensor(
     nnz_per_task = np.asarray(task_count, dtype=np.int32)
     for i, (s0, c) in enumerate(zip(task_start, task_count, strict=True)):
         abs_coords = coords_s[s0 : s0 + c]
-        coords_rel[i, :c] = abs_coords - task_chunk[i] * cs.astype(np.int32)
+        coords_rel[i, :c] = abs_coords - task_chunk[i] * cs32
         values[i, :c] = values_s[s0 : s0 + c]
 
     return ChunkedTensor(

@@ -94,6 +94,7 @@ def split_tasks(
         thr = cost_d / max(
             sparse_path_cost(1, ct.chunk_shape, rank) * math.prod(ct.chunk_shape), 1
         )
+    # repro-lint: disable=int32-index-width -- task-index permutation; task count is nnz/capacity and nnz is itself int32-bounded (coords are int32)
     return HeteroSplit(dense.astype(np.int32), sparse.astype(np.int32), thr)
 
 

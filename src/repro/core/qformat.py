@@ -30,6 +30,7 @@ __all__ = [
     "Q9_7",
     "Q17_15",
     "QFormat",
+    "accumulator_safe_nnz",
     "cross_mode_error_bound",
     "preset_error_bound",
     "value_qformat",
@@ -146,6 +147,28 @@ def preset_error_bound(preset: str, ndim: int, *, value_frac: int = 7) -> float:
     value_err = 0.5 ** (value_frac + 1)
     dequant_err = (1 << prec_shift) * qf.max_abs_error
     return factor_err + value_err + dequant_err
+
+
+def accumulator_safe_nnz(preset: str, *, value_frac: int = 7) -> int:
+    """Largest per-output-row nonzero count for which the int32 accumulator
+    of the fixed MTTKRP (paper Alg. 2) provably cannot overflow.
+
+    After Alg. 2's renormalizing shifts each accumulated partial is an
+    integer of magnitude at most `2^(frac + 15 - value_frac - prec_shift)`:
+    the factor product stays ≤ 1.0 (i.e. ≤ `scale` as an integer) because
+    factors are L∞-normalized and every multiply is followed by a
+    `>> matrix_frac`; the 16-bit tensor value contributes up to `2^15`
+    before its `>> (value_frac + prec_shift)`.  The int32 accumulator holds
+    `2^31 - 1`, so summing more than this many partials into one output row
+    can wrap — silently, since device int arithmetic does not trap.
+
+    The analysis suite pins these values per preset (int3: 1048575,
+    int7: 65535, int15-12: 2047) in `kernel_contracts.json` and re-derives
+    them from `FIXED_PRESETS`, so a preset change that shrinks the headroom
+    fails static analysis instead of corrupting large-tensor runs."""
+    qf, prec_shift = FIXED_PRESETS[preset]
+    headroom = qf.frac_bits + 15 - value_frac - prec_shift
+    return (2**31 - 1) >> max(headroom, 0)
 
 
 def cross_mode_error_bound(
