@@ -14,7 +14,7 @@ from __future__ import annotations
 import time
 
 from repro.core import cp_als, table1_tensor
-from repro.engine import PlanCache, candidate_lossless
+from repro.engine import PlanCache, TunePolicy, candidate_lossless
 
 from .common import save, table
 
@@ -44,10 +44,11 @@ def _tune_rows(iters: int, fast: bool, accuracy_budget: float | None):
         st = table1_tensor(tname, nnz=8000 if fast else None)
         plans = PlanCache()
         for budget in budgets:
-            kw = dict(engine="auto", seed=0, mem_bytes=256 * 1024, plans=plans)
-            if budget is not None:
-                kw.update(accuracy_budget=budget, candidates=TUNE_CANDIDATES)
-            res = cp_als(st, RANK, n_iters=iters, **kw)
+            tune = (TunePolicy() if budget is None else
+                    TunePolicy(accuracy_budget=budget,
+                               candidates=tuple(TUNE_CANDIDATES)))
+            res = cp_als(st, RANK, n_iters=iters, engine="auto", seed=0,
+                         mem_bytes=256 * 1024, plans=plans, tune=tune)
             rep = res.tune_report
             picked = {str(m): w for m, w in sorted(rep.winners.items())}
             lossy_picks = sorted({w for w in rep.winners.values()

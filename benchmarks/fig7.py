@@ -21,6 +21,7 @@ from repro.engine import (
     CalibratedPrior,
     CalibrationError,
     PlanCache,
+    TunePolicy,
     TuningStore,
     build_engine,
     default_prior,
@@ -69,7 +70,8 @@ def prior_eval(tstore: TuningStore, tensors: list[str], fast: bool) -> dict:
         # decision verifiable and minimizes clock drift between the two.
         plans = PlanCache()
         full = build_engine(st, "auto", RANK, mem_bytes=256 * 1024,
-                            plans=plans, prior="default", elide=False)
+                            plans=plans,
+                            tune=TunePolicy(prior="default", elide=False))
         # elide=True with a fixed moderate margin: this is the elision
         # *demonstration*, and must exercise the mechanism even when the
         # residual-derived production margin saturates at 2.0 (on these
@@ -77,8 +79,9 @@ def prior_eval(tstore: TuningStore, tensors: list[str], fast: bool) -> dict:
         # elides nothing) or the model-selection guard kept analytic
         # coefficients (used_fit=False turns the default policy off).
         eng = build_engine(st, "auto", RANK, mem_bytes=256 * 1024,
-                           plans=plans, prior=calib, elide=True,
-                           elide_margin=1.35)
+                           plans=plans,
+                           tune=TunePolicy(prior=calib, elide=True,
+                                           elide_margin=1.35))
         rep = eng.report
         agree = ok = 0
         for mode, fwin in full.report.winners.items():
@@ -158,13 +161,13 @@ def run(fast: bool = False, store: str | TuningStore | None = None):
             if engine == "auto":
                 t0 = time.perf_counter()
                 eng = build_engine(st, engine, RANK, mem_bytes=256 * 1024,
-                                   plans=plans, store=tstore)
+                                   plans=plans, tune=TunePolicy(store=tstore))
                 tune_s = time.perf_counter() - t0
                 # Re-build against the now-warm store: the fingerprint hit
                 # must skip every probe, so warm tuning overhead ≈ build.
                 t0 = time.perf_counter()
                 warm = build_engine(st, engine, RANK, mem_bytes=256 * 1024,
-                                    plans=plans, store=tstore)
+                                    plans=plans, tune=TunePolicy(store=tstore))
                 warm_s = time.perf_counter() - t0
                 extra = dict(
                     tune_ms=round(tune_s * 1e3, 2),

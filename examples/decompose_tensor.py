@@ -21,7 +21,8 @@ import argparse
 import time
 
 from repro.core import cp_als, decide_partition, table1_tensor
-from repro.engine import backend_table, build_engine, registered_backends
+from repro.engine import (TunePolicy, backend_table, build_engine,
+                          registered_backends)
 
 
 def main():
@@ -52,7 +53,8 @@ def main():
     t0 = time.time()
     engine = build_engine(st, args.engine, args.rank,
                           chunk_shape=plan.chunk_shape, capacity=plan.capacity,
-                          store=args.store, max_probes=args.max_probes)
+                          tune=TunePolicy(store=args.store,
+                                          max_probes=args.max_probes))
     if engine.report is not None:
         print(engine.report.summary())
         print(f"[decompose] tuning: source={engine.report.source} "

@@ -16,8 +16,7 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.data import SyntheticTokens
 from repro.launch.mesh import make_local_mesh
-from repro.launch.serve import generate
-from repro.launch.steps import make_ctx
+from repro.launch.steps import generate, make_ctx
 from repro.models import LM
 
 

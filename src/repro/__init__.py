@@ -1,13 +1,20 @@
 """repro — PRISM sparse-MTTKRP tensor decomposition, reproduced on JAX.
 
-The supported product surface, re-exported from the four subsystems:
+The supported product surface, re-exported from the six subsystems:
 
 - `repro.core`    — `SparseTensor`, CP-ALS (`cp_als`), the MTTKRP kernels'
                     reference implementations, fixed-point `QFormat`s.
 - `repro.engine`  — `build_engine`/`autotune_engine` (backend registry,
-                    persistent autotuner, calibrated cost prior).
+                    persistent autotuner, calibrated cost prior) and
+                    `TunePolicy`, the one bundle of tuning knobs every
+                    tuning-aware entry point accepts as `tune=`.
 - `repro.formats` — pluggable sparse layouts (COO/CSF/ALTO) + `FormatStats`.
 - `repro.sweep`   — offline design-space sweeps shipping warm tuning stores.
+- `repro.batch`   — many-small-tensor batched CP-ALS (`cp_als_batched`):
+                    bucket by (shape class, nnz band), vmap the kernel, one
+                    autotune decision per bucket.
+- `repro.serve`   — `DecomposeService`, the coalescing request loop over
+                    the batched path.
 
 Everything importable from `repro` directly is API; subpackages not
 re-exported here (`repro.models`, `repro.configs`, the LM launch/optim/data
@@ -16,6 +23,7 @@ tests — see docs/static-analysis.md#import-orphans.
 """
 from __future__ import annotations
 
+from repro.batch import cp_als_batched
 from repro.core import (
     TABLE1,
     CPResult,
@@ -27,6 +35,7 @@ from repro.core import (
 )
 from repro.engine import (
     AutotuneReport,
+    TunePolicy,
     TuningStore,
     autotune_engine,
     build_engine,
@@ -39,21 +48,25 @@ from repro.formats import (
     register_format,
     registered_formats,
 )
+from repro.serve import DecomposeService
 from repro.sweep import SweepConfig, load_config, pareto_report, run_sweep
 
 __all__ = [
     "TABLE1",
     "AutotuneReport",
     "CPResult",
+    "DecomposeService",
     "FormatCache",
     "FormatStats",
     "QFormat",
     "SparseTensor",
     "SweepConfig",
+    "TunePolicy",
     "TuningStore",
     "autotune_engine",
     "build_engine",
     "cp_als",
+    "cp_als_batched",
     "load_config",
     "pareto_report",
     "random_tensor",

@@ -452,10 +452,12 @@ def check_registry_docs(ctx: ProjectContext) -> Iterator[Finding]:
 #: the LM seed code back into the supported surface.
 PRODUCT_PACKAGES = (
     "repro.analysis",
+    "repro.batch",
     "repro.core",
     "repro.engine",
     "repro.formats",
     "repro.kernels",
+    "repro.serve",
     "repro.sweep",
 )
 
@@ -470,7 +472,6 @@ QUARANTINED_PACKAGES = (
     "repro.data",
     "repro.launch.dryrun",
     "repro.launch.elastic",
-    "repro.launch.serve",
     "repro.launch.shardings",
     "repro.launch.steps",
     "repro.models",

@@ -30,6 +30,8 @@ JAX_TARGETS = (
     "src/repro/core",
     "src/repro/engine",
     "src/repro/formats",
+    "src/repro/batch",
+    "src/repro/serve",
 )
 
 

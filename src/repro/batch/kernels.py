@@ -1,0 +1,115 @@
+"""Batched MTTKRP kernels: `vmap` over the bucket's batch dimension.
+
+Each batched kernel wraps one of the single-tensor kernels from
+`repro.core.mttkrp` with `jax.vmap` over a leading batch axis — the bucket
+members' geometry is identical after padding (`bucketing.pad_bucket`), so
+one compiled program serves the whole bucket and XLA fuses the per-member
+work into batched gathers/scatters.
+
+Candidates:
+
+  ref   — vmapped `mttkrp_coo`.  Padded slots carry value 0.0, so their
+          scatter-add contribution is exactly zero.
+  alto  — vmapped `mttkrp_alto`.  The bit-interleave positions depend only
+          on the *shape*, and every bucket member shares the padded shape
+          class — so one static `positions` tuple serves the whole batch,
+          exactly the property that makes ALTO batchable.  (CSF is not a
+          candidate: its fiber count is a per-member static, which would
+          force one compilation per member and defeat the batching.)
+
+A builder takes the bucket's `PaddedBatch`, moves the batch arrays to
+device once, and returns ``engine(factors, mode) -> (B, dims[mode], R)``
+with ``factors`` a list of ``(B, dims[m], R)`` batched factor matrices.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.mttkrp import mttkrp_alto, mttkrp_coo
+from ..core.sptensor import SparseTensor
+from ..formats.alto import build_alto
+from .bucketing import PaddedBatch
+
+__all__ = ["batched_kernel_names", "build_batched_kernel"]
+
+
+@partial(jax.jit, static_argnames=("mode", "out_dim"))
+def _batched_mttkrp_coo(factors, coords, values, *, mode: int, out_dim: int):
+    """factors: tuple of (B, I_m, R); coords (B, P, N) int32; values (B, P)
+    f32.  Returns (B, out_dim, R) f32."""
+    return jax.vmap(
+        lambda f, c, v: mttkrp_coo(f, c, v, mode=mode, out_dim=out_dim)
+    )(factors, coords, values)
+
+
+@partial(jax.jit, static_argnames=("mode", "positions", "out_dim"))
+def _batched_mttkrp_alto(factors, key_words, values, *, mode: int,
+                         positions, out_dim: int):
+    """factors: tuple of (B, I_m, R); key_words (B, P, W) uint32 (each
+    member's rows sorted by its own key); values (B, P) f32 in key order.
+    `positions` is shared by the whole batch — it depends only on the
+    padded shape class."""
+    return jax.vmap(
+        lambda f, k, v: mttkrp_alto(f, k, v, mode=mode, positions=positions,
+                                    out_dim=out_dim)
+    )(factors, key_words, values)
+
+
+def _build_ref(pb: PaddedBatch):
+    coords = jnp.asarray(pb.coords)
+    values = jnp.asarray(pb.values)
+    dims = pb.dims
+
+    def engine(factors, mode: int):
+        return _batched_mttkrp_coo(tuple(jnp.asarray(f) for f in factors),
+                                   coords, values,
+                                   mode=int(mode), out_dim=dims[mode])
+    return engine
+
+
+def _build_alto(pb: PaddedBatch):
+    # Linearize each member against the PADDED dims: the interleave
+    # positions are a function of the shape alone, so the whole bucket
+    # shares one static decode — padded slots (coords 0, value 0) sort to
+    # the front as key 0 and contribute zero to the segment sum.
+    alto = [build_alto(SparseTensor(pb.coords[i], pb.values[i], pb.dims))
+            for i in range(pb.size)]
+    key_words = jnp.asarray(np.stack([a.key_words for a in alto]))
+    values = jnp.asarray(np.stack([a.values for a in alto]))
+    positions = alto[0].positions
+    dims = pb.dims
+
+    def engine(factors, mode: int):
+        return _batched_mttkrp_alto(tuple(jnp.asarray(f) for f in factors),
+                                    key_words, values, mode=int(mode),
+                                    positions=positions, out_dim=dims[mode])
+    return engine
+
+
+#: name -> builder(PaddedBatch) -> engine.  Enumerations go through
+#: `batched_kernel_names()` (sorted) so registration order never leaks into
+#: probe order or tie-breaks.
+_BATCHED_BUILDERS = {
+    "alto": _build_alto,
+    "ref": _build_ref,
+}
+
+
+def batched_kernel_names() -> list[str]:
+    """The registered batched kernels, sorted by name."""
+    return sorted(_BATCHED_BUILDERS)
+
+
+def build_batched_kernel(name: str, pb: PaddedBatch):
+    """Build the named batched kernel against one bucket's padded arrays."""
+    try:
+        builder = _BATCHED_BUILDERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown batched kernel {name!r}; registered: "
+            f"{batched_kernel_names()}") from None
+    return builder(pb)

@@ -1,0 +1,267 @@
+"""One autotune decision per bucket, amortized through the `TuningStore`.
+
+PRISM's lesson — amortize per-workload tuning across similar workloads —
+already lives in the store's fingerprint matching.  The batched path
+extends it from "one tensor, many modes" to "one bucket, many tensors": a
+bucket's tuning fingerprint (`bucket_workload_key`) is *canonical* — built
+from the bucket's padded dims and the nnz band's lower edge, never from any
+member's true stats — so every member of the bucket, in this process or
+any later one, computes the byte-identical exact-match key.  The first
+member to arrive probes the batched kernels and records the winners; the
+2nd..Nth members (and a fresh process loading the store) dispatch with
+``n_probes == 0``.
+
+Bucket candidate ids are spelled ``"batched:<kernel>"`` in the fingerprint
+and the recorded timings, which keeps bucket entries disjoint from every
+single-tensor workload key and lets the cost-model calibration exclude
+them from its fit (batch-level timings are not single-tensor training
+rows — see `repro.engine.calibrate`).
+
+`BucketPlanCache` is the in-process layer above the store — the bucket
+analogue of the engine's `PlanCache`: a dispatch that already decided a
+bucket this process skips even the store read.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import time
+
+import jax
+import numpy as np
+
+from ..engine.autotune import AutotuneReport
+from ..engine.persist import (
+    StoredEntry,
+    TuningStore,
+    WorkloadKey,
+    device_fingerprint,
+    resolve_store,
+)
+from ..engine.tunepolicy import TunePolicy
+from ..formats import FormatStats
+from .bucketing import PaddedBatch
+from .kernels import batched_kernel_names, build_batched_kernel
+
+__all__ = [
+    "BucketPlanCache",
+    "autotune_bucket",
+    "bucket_workload_key",
+]
+
+_PREFIX = "batched:"
+
+
+def _candidate_id(name: str) -> str:
+    return name if name.startswith(_PREFIX) else _PREFIX + name
+
+
+def _kernel_name(candidate: str) -> str:
+    return candidate.removeprefix(_PREFIX)
+
+
+def bucket_workload_key(dims: tuple[int, ...], band: int, rank: int,
+                        names) -> WorkloadKey:
+    """The bucket's canonical tuning fingerprint.
+
+    Uses the band's lower edge (``2^band``) as the nominal nnz — NOT any
+    member's true count — so every member of the bucket builds the same
+    exact-match key regardless of where in the band it sits (bands are
+    wider than the store's near-match tolerance, so member-keyed
+    fingerprints would miss each other)."""
+    nominal_nnz = 0 if band < 0 else 1 << band
+    return WorkloadKey(
+        shape=tuple(int(d) for d in dims),
+        nnz=nominal_nnz,
+        density=nominal_nnz / math.prod(dims),
+        ndim=len(dims),
+        rank=int(rank),
+        candidates=tuple(sorted(_candidate_id(n) for n in names)),
+        device=tuple(sorted(device_fingerprint().items())),
+        capacity=None,
+    )
+
+
+@dataclasses.dataclass
+class BucketPlanCache:
+    """In-process (bucket key → tuning decision) cache with hit counters —
+    the bucket-level analogue of `repro.engine.PlanCache`.  A decided
+    bucket skips the store read entirely on repeat dispatches."""
+
+    entries: dict[WorkloadKey, StoredEntry] = dataclasses.field(
+        default_factory=dict)
+    hits: int = 0
+    misses: int = 0
+
+    def get(self, key: WorkloadKey) -> StoredEntry | None:
+        entry = self.entries.get(key)
+        if entry is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return entry
+
+    def put(self, key: WorkloadKey, entry: StoredEntry) -> None:
+        self.entries[key] = entry
+
+    def clear(self) -> None:
+        self.entries.clear()
+
+
+def _time_batched(engine, factors, mode: int, *, warmup: int, reps: int) -> float:
+    for _ in range(warmup):
+        # repro-lint: disable=host-sync -- timing harness: warmup drains compilation before the measured reps
+        jax.block_until_ready(engine(factors, mode))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        # repro-lint: disable=host-sync -- timing harness: the barrier IS the measurement boundary
+        jax.block_until_ready(engine(factors, mode))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _resolve_names(policy: TunePolicy) -> list[str]:
+    registered = batched_kernel_names()
+    if policy.candidates is None:
+        return registered
+    names = [_kernel_name(c) for c in policy.candidates]
+    unknown = sorted(set(names) - set(registered))
+    if unknown:
+        raise ValueError(
+            f"unknown batched kernel(s) {unknown}; registered: {registered}")
+    return sorted(set(names))
+
+
+def autotune_bucket(
+    pb: PaddedBatch,
+    rank: int,
+    policy: TunePolicy | None = None,
+    *,
+    seed: int = 0,
+    plans: BucketPlanCache | None = None,
+):
+    """Pick the batched MTTKRP kernel for one bucket — probing at most once
+    per (bucket fingerprint, store).
+
+    Returns ``(engine, report)`` where ``engine(factors, mode)`` maps the
+    batched factors (list of ``(B, dims[m], R)``) to ``(B, dims[mode], R)``
+    and ``report`` is an `AutotuneReport` (``source="measured"`` with
+    probes charged for the bucket's first decision, ``"persisted"`` for a
+    store hit, ``"cached"`` for an in-process `BucketPlanCache` hit — the
+    latter two with ``n_probes == 0``).
+
+    Policy fields consumed: candidates (``"batched:"`` prefixes optional),
+    warmup, reps, store, max_probes.  `accuracy_budget` raises — every
+    batched kernel is exact, there is nothing to budget; prior/elide are
+    single-tensor cost-model machinery and are ignored here (the batched
+    candidate space is two kernels, not a (backend × preset) grid).
+    """
+    policy = policy if policy is not None else TunePolicy()
+    if policy.accuracy_budget is not None:
+        raise ValueError(
+            "accuracy_budget does not apply to the batched path: every "
+            "batched kernel is exact (lossless); drop it from the policy")
+    names = _resolve_names(policy)
+    modes = list(range(len(pb.dims)))
+    key = bucket_workload_key(pb.dims, pb.band, rank, names)
+    store = resolve_store(policy.store)
+
+    entry, source = None, None
+    if plans is not None:
+        entry = plans.get(key)
+        source = "cached" if entry is not None else None
+    if entry is None and store is not None:
+        # Exact-match only (nnz_tol=0): the canonical fingerprint makes
+        # every member's key byte-identical, and adjacent bands must never
+        # serve each other.
+        entry = store.lookup(key, nnz_tol=0.0, budget=None)
+        source = "persisted" if entry is not None else None
+
+    if entry is not None:
+        winners = {m: entry.winners[m] for m in modes if m in entry.winners}
+        if set(winners) == set(modes):
+            built = {c: build_batched_kernel(_kernel_name(c), pb)
+                     for c in sorted(set(winners.values()))}
+            report = AutotuneReport(
+                winners=winners,
+                timings={n: dict(p) for n, p in entry.timings.items()},
+                candidates=[_candidate_id(n) for n in names], skipped={},
+                warmup=entry.warmup, reps=entry.reps,
+                source=source, n_probes=0,
+                store_path=store.path if store is not None else None)
+            if plans is not None:
+                plans.put(key, entry)
+            return _dispatch(built, winners), report
+
+    # -- cold: probe every candidate on every mode -------------------------
+    rng = np.random.default_rng(seed)
+    factors = [np.asarray(rng.uniform(0, 1, size=(pb.size, d, rank)),
+                          dtype=np.float32) for d in pb.dims]
+    probe_list = list(names)
+    skipped: dict[str, str] = {}
+    if policy.max_probes is not None and policy.max_probes < len(probe_list):
+        for n in probe_list[policy.max_probes:]:
+            skipped[_candidate_id(n)] = (
+                f"pruned (max_probes={policy.max_probes})")
+        probe_list = probe_list[: policy.max_probes]
+
+    timings: dict[str, dict[int, float]] = {}
+    n_probes = 0
+    for name in probe_list:
+        cid = _candidate_id(name)
+        try:
+            engine = build_batched_kernel(name, pb)
+            per_mode = {}
+            for m in modes:
+                per_mode[m] = _time_batched(engine, factors, m,
+                                            warmup=policy.warmup,
+                                            reps=policy.reps)
+        except Exception as e:  # blind by design: one broken kernel must not kill the bucket
+            skipped[cid] = f"{type(e).__name__}: {e}"
+            continue
+        timings[cid] = per_mode
+        n_probes += len(per_mode)
+    if not timings:
+        raise RuntimeError(f"autotune_bucket: every candidate failed: {skipped}")
+
+    winners = {m: min(timings, key=lambda n, m=m: (timings[n][m], n))
+               for m in modes}
+    report = AutotuneReport(
+        winners=winners, timings=timings,
+        candidates=[_candidate_id(n) for n in names], skipped=skipped,
+        warmup=policy.warmup, reps=policy.reps,
+        source="measured", n_probes=n_probes,
+        store_path=store.path if store is not None else None)
+
+    entry = StoredEntry(key=key, winners=dict(winners),
+                        timings={n: dict(p) for n, p in timings.items()},
+                        warmup=policy.warmup, reps=policy.reps)
+    if store is not None:
+        # An unwritable store degrades to per-process tuning.  The nominal-
+        # nnz FormatStats estimate rides along (schema v4) so the entry
+        # documents the bucket's layout statistics like any other workload.
+        with contextlib.suppress(OSError):
+            entry = store.record(
+                key, winners, timings,
+                warmup=policy.warmup, reps=policy.reps,
+                format_stats=FormatStats.estimate(pb.dims, key.nnz).to_json())
+    if plans is not None:
+        plans.put(key, entry)
+
+    built = {c: build_batched_kernel(_kernel_name(c), pb)
+             for c in sorted(set(winners.values()))}
+    return _dispatch(built, winners), report
+
+
+def _dispatch(built: dict, winners: dict[int, str]):
+    """Route each batched MTTKRP call to its per-mode winning kernel."""
+    def engine(factors, mode: int):
+        name = winners.get(mode)
+        if name is None:
+            raise ValueError(
+                f"bucket engine has no kernel for mode {mode}: tuned modes "
+                f"are {sorted(winners)}")
+        return built[name](factors, mode)
+    return engine

@@ -13,3 +13,12 @@ from .mttkrp import (
 from .partition import PartitionPlan, decide_partition
 from .qformat import FIXED_PRESETS, Q17_15, Q5_3, Q9_7, QFormat, value_qformat
 from .sptensor import TABLE1, SparseTensor, random_tensor, table1_tensor
+
+
+def __getattr__(name):
+    # Lazy (PEP 562): `repro.batch` itself imports from `repro.core.cpals`,
+    # so an eager import here would be circular.
+    if name == "cp_als_batched":
+        from ..batch import cp_als_batched
+        return cp_als_batched
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -243,21 +243,37 @@ def cp_als(
     seed: int = 0,
     track_diff: bool = True,
     tol: float | None = None,
-    accuracy_budget: float | None = None,
+    tune=None,
     **engine_kwargs,
 ) -> CPResult:
-    """`accuracy_budget` (with engine="auto") admits fixed-point preset
-    candidates to the autotuner, each held to this max per-mode MTTKRP
-    relative error — the paper's Fig. 6 format trade-off made empirically,
-    per workload.  The result's `quant_error` reports the measured
-    quantization error whenever a lossy engine produced the factors, and
-    the fit fast path stays disabled for it (quantization noise must not
-    bias the reported fit)."""
+    """`tune` is a `repro.engine.TunePolicy` bundling the autotuner's knobs
+    (candidates, warmup, reps, store, prior, max_probes, elide,
+    elide_margin, accuracy_budget); its `accuracy_budget` (with
+    engine="auto") admits fixed-point preset candidates to the autotuner,
+    each held to that max per-mode MTTKRP relative error — the paper's
+    Fig. 6 format trade-off made empirically, per workload.  The result's
+    `quant_error` reports the measured quantization error whenever a lossy
+    engine produced the factors, and the fit fast path stays disabled for
+    it (quantization noise must not bias the reported fit).
+
+    The nine tuning keywords are still accepted inside `**engine_kwargs` as
+    deprecated shims (one `DeprecationWarning` per call folds them into the
+    policy); the rest of `engine_kwargs` must be `build_engine` options
+    (mem_bytes, chunk_shape, capacity, fixed_preset, ... — unknown keywords
+    raise a `TypeError` naming the nearest valid spelling)."""
+    from ..engine import validate_engine_kwargs
+    from ..engine.tunepolicy import TunePolicy, split_tune_kwargs
+
+    legacy = split_tune_kwargs(engine_kwargs)
+    validate_engine_kwargs("cp_als", engine_kwargs,
+                           extra=("plans", "autotune_modes"))
+    policy = TunePolicy.resolve(tune, caller="cp_als", **legacy)
+
     n = st.ndim
     factors = init_factors(st.shape, rank, seed)
     lam = jnp.ones((rank,), jnp.float32)
     if callable(engine):
-        if accuracy_budget is not None:
+        if policy.accuracy_budget is not None:
             raise ValueError(
                 "accuracy_budget only applies to engine='auto'; a prebuilt "
                 "engine has already made its format decision")
@@ -266,8 +282,7 @@ def cp_als(
             engine, "__name__", "custom")
     else:
         from ..engine import build_engine
-        eng = build_engine(st, engine, rank,
-                           accuracy_budget=accuracy_budget, **engine_kwargs)
+        eng = build_engine(st, engine, rank, tune=policy, **engine_kwargs)
         eng_name = eng.name  # e.g. "chunked", "auto:hetero"
 
     fit_fast = _exact_mttkrp(eng)

@@ -3,14 +3,18 @@ empirical autotuner with persistence and a cost-model prior.
 
 Public entrypoint::
 
-    from repro.engine import build_engine
+    from repro.engine import TunePolicy, build_engine
     eng = build_engine(st, "auto", rank=10)     # measured selection
-    eng = build_engine(st, "auto", rank=10,
-                       store=True)              # persist winners across runs
+    eng = build_engine(st, "auto", rank=10,     # persist winners across runs
+                       tune=TunePolicy(store=True))
     eng = build_engine(st, "chunked", rank=10)  # explicit backend
     out = eng(factors, mode)                    # (I_mode, R) f32
 
-`cp_als(st, rank, engine="auto", store=...)` goes through the same path.
+`cp_als(st, rank, engine="auto", tune=TunePolicy(...))` goes through the
+same path.  `TunePolicy` is the one bundle of tuning knobs (candidates,
+warmup/reps, store, prior, probe budget, elision, accuracy budget); the old
+loose keyword arguments still work but are deprecated shims that fold into
+a policy and warn.
 """
 from __future__ import annotations
 
@@ -57,6 +61,7 @@ from .registry import (
     register_backend,
     registered_backends,
 )
+from .tunepolicy import TUNE_FIELDS, UNSET, TunePolicy, nearest_kwarg_error
 
 __all__ = [
     "AutotuneReport",
@@ -73,6 +78,8 @@ __all__ = [
     "Observation",
     "PlanCache",
     "StoredEntry",
+    "TUNE_FIELDS",
+    "TunePolicy",
     "TuningStore",
     "WorkloadKey",
     "WorkloadStats",
@@ -95,7 +102,28 @@ __all__ = [
     "ranking_accuracy",
     "register_backend",
     "registered_backends",
+    "validate_engine_kwargs",
 ]
+
+
+def _context_option_names() -> set[str]:
+    """EngineContext fields a caller may pass as options (everything the
+    builder fills itself — tensor, rank, plan cache — excluded)."""
+    import dataclasses as _dc
+    return {f.name for f in _dc.fields(EngineContext)} - {"st", "rank", "plans"}
+
+
+def validate_engine_kwargs(caller: str, options: dict,
+                           *, extra: tuple[str, ...] = ()) -> None:
+    """Reject unknown engine/tuning keywords with a nearest-match hint.
+
+    The valid set is derived from the live signatures — `EngineContext`'s
+    option fields plus the `TunePolicy` shim keywords plus `extra` — so it
+    can never drift from what the builder actually accepts."""
+    valid = _context_option_names() | set(TUNE_FIELDS) | set(extra)
+    unknown = set(options) - valid
+    if unknown:
+        raise nearest_kwarg_error(caller, unknown, valid)
 
 
 def build_engine(
@@ -103,17 +131,18 @@ def build_engine(
     method: str | Callable = "auto",
     rank: int = 10,
     *,
+    tune: TunePolicy | None = None,
     plans: PlanCache | None = None,
-    candidates: list[str] | None = None,
-    warmup: int = 1,
-    reps: int = 2,
     autotune_modes: list[int] | None = None,
-    store: TuningStore | str | bool | None = None,
-    prior: CostModelPrior | str | None = None,
-    max_probes: int | None = None,
-    elide: bool | None = None,
-    elide_margin: float | None = None,
-    accuracy_budget: float | None = None,
+    candidates=UNSET,
+    warmup=UNSET,
+    reps=UNSET,
+    store=UNSET,
+    prior=UNSET,
+    max_probes=UNSET,
+    elide=UNSET,
+    elide_margin=UNSET,
+    accuracy_budget=UNSET,
     **options,
 ) -> Engine:
     """Build an MTTKRP engine through the registry.
@@ -121,36 +150,31 @@ def build_engine(
     method       — a registered backend name, a preset candidate id
                    (``"fixed:int7"`` pins that Qm.n preset), ``"auto"``
                    (empirical selection over the eligible lossless backends
-                   — plus, under `accuracy_budget`, every lossy preset
+                   — plus, under `tune.accuracy_budget`, every lossy preset
                    variant), or a callable ``f(factors, mode)`` which is
                    wrapped unchanged.
-    accuracy_budget — admit lossy (fixed-point) candidates to the ``"auto"``
-                   tuner, each policed against this max per-mode MTTKRP
-                   relative error (measured on a deterministic nnz sample
-                   during probing); None keeps the lossless-only space.
-                   Only meaningful with ``method="auto"``.
-    store        — autotuner persistence: ``True`` for the default store
-                   (``~/.cache/repro/autotune.json``, env
-                   ``REPRO_AUTOTUNE_CACHE`` overrides), a path, or a
-                   ``TuningStore``.  A workload+device fingerprint hit skips
-                   the probe phase and dispatches to the persisted winners.
-    prior        — cold-start ranking model: a `CostModelPrior`,
-                   ``"default"`` (analytic coefficients), ``"calibrated"``
-                   (least-squares fit to the store's measured timings), or
-                   None — calibrate when the store holds enough
-                   observations, else the analytic default.
-    max_probes   — cold-start probe budget: only the prior's top-k
-                   candidates are timed.
-    elide        — cross-mode probe elision (see `autotune_engine`); default
-                   None enables it exactly when the prior is calibrated.
-    elide_margin — decision-boundary width for elision (default: the
-                   calibrated prior's residual-derived margin).
+    tune         — a `TunePolicy` bundling the autotuner's knobs
+                   (candidates, warmup, reps, store, prior, max_probes,
+                   elide, elide_margin, accuracy_budget — see
+                   `repro.engine.tunepolicy` for the per-field semantics);
+                   None means the policy defaults.  The individual keywords
+                   survive as deprecated shims that fold into the policy
+                   (`DeprecationWarning`, exactly one per call); mixing them
+                   with `tune=` raises.
     options      — EngineContext fields: mem_bytes, chunk_shape, capacity,
                    fixed_preset, lockfree_mode, dense_fraction, mesh, reduce,
                    interpret, formats (a `repro.formats.FormatCache` — pass
                    one to isolate the csf/alto layout cache, as the plan
-                   cache is isolated with `plans=`).
+                   cache is isolated with `plans=`).  Unknown keywords raise
+                   a `TypeError` naming the nearest valid spelling.
     """
+    policy = TunePolicy.resolve(
+        tune, caller="build_engine",
+        candidates=candidates, warmup=warmup, reps=reps, store=store,
+        prior=prior, max_probes=max_probes, elide=elide,
+        elide_margin=elide_margin, accuracy_budget=accuracy_budget)
+    validate_engine_kwargs("build_engine", options)
+
     if callable(method):
         return Engine(getattr(method, "__name__", "custom"), method)
 
@@ -160,13 +184,10 @@ def build_engine(
         **options)
 
     if method == "auto":
-        handle, _report = autotune_engine(
-            ctx, candidates=candidates, warmup=warmup, reps=reps,
-            modes=autotune_modes, store=store, prior=prior,
-            max_probes=max_probes, elide=elide, elide_margin=elide_margin,
-            accuracy_budget=accuracy_budget)
+        handle, _report = autotune_engine(ctx, tune=policy,
+                                          modes=autotune_modes)
         return handle
-    if accuracy_budget is not None:
+    if policy.accuracy_budget is not None:
         raise ValueError(
             "accuracy_budget only applies to engine='auto' (an explicit "
             f"backend — here {method!r} — is already a format decision); "

@@ -66,6 +66,7 @@ from .registry import (
     parse_candidate,
     preset_candidates,
 )
+from .tunepolicy import UNSET, TunePolicy
 
 __all__ = ["AutotuneReport", "autotune_engine"]
 
@@ -247,21 +248,28 @@ def _resolve_prior(
 def autotune_engine(
     ctx: EngineContext,
     *,
-    candidates: list[str] | None = None,
-    warmup: int = 1,
-    reps: int = 2,
+    tune: TunePolicy | None = None,
     modes: list[int] | None = None,
     seed: int = 0,
-    store: TuningStore | str | bool | None = None,
-    prior: CostModelPrior | str | None = None,
-    max_probes: int | None = None,
-    elide: bool | None = None,
-    elide_margin: float | None = None,
-    accuracy_budget: float | None = None,
+    candidates=UNSET,
+    warmup=UNSET,
+    reps=UNSET,
+    store=UNSET,
+    prior=UNSET,
+    max_probes=UNSET,
+    elide=UNSET,
+    elide_margin=UNSET,
+    accuracy_budget=UNSET,
 ) -> tuple[Engine, AutotuneReport]:
     """Measure candidate backends on `ctx.st` and return a dispatching
     engine that routes each MTTKRP mode to its measured (or, under elision,
     confidently predicted) winner.
+
+    The tuning knobs arrive as one `tune: TunePolicy` (see
+    `repro.engine.tunepolicy` for per-field semantics — candidates, warmup,
+    reps, store, prior, max_probes, elide, elide_margin, accuracy_budget);
+    the individual keywords survive as deprecated shims that fold into the
+    policy with a single `DeprecationWarning` per call.  In brief:
 
     accuracy_budget — max tolerated per-mode MTTKRP relative error, or None
                    (default) to keep the lossless-only candidate space.
@@ -306,11 +314,18 @@ def autotune_engine(
     decomposition down with it — and its probes are not charged to
     `report.n_probes`.
     """
-    if accuracy_budget is not None and not accuracy_budget > 0:
-        raise ValueError(
-            f"accuracy_budget is a max relative error and must be > 0 (got "
-            f"{accuracy_budget}); pass None to keep the lossless-only "
-            "candidate space")
+    policy = TunePolicy.resolve(
+        tune, caller="autotune_engine",
+        candidates=candidates, warmup=warmup, reps=reps, store=store,
+        prior=prior, max_probes=max_probes, elide=elide,
+        elide_margin=elide_margin, accuracy_budget=accuracy_budget)
+    candidates = (list(policy.candidates)
+                  if policy.candidates is not None else None)
+    warmup, reps = policy.warmup, policy.reps
+    store, prior = policy.store, policy.prior
+    max_probes, elide = policy.max_probes, policy.elide
+    elide_margin = policy.elide_margin
+    accuracy_budget = policy.accuracy_budget
     if candidates is None:
         candidates = [n for n in eligible_backends(lossless_only=True)
                       if n != "auto"]
@@ -329,21 +344,10 @@ def autotune_engine(
             parse_candidate(cand)  # fail fast on a typo'd backend/preset
     if not candidates:
         raise ValueError("no eligible backends to autotune over")
-    if max_probes is not None and max_probes < 1:
-        raise ValueError(f"max_probes must be >= 1 (got {max_probes})")
-    if elide_margin is not None and elide_margin < 1.0:
-        # A margin below 1 would exclude even the unmeasured predicted
-        # leader from re-probing, silently deciding every non-anchor mode
-        # with zero measurements — the opposite of a "tight margin".
-        raise ValueError(
-            f"elide_margin is a slowdown factor and must be >= 1.0 "
-            f"(got {elide_margin}); 1.0 trusts the prior completely, "
-            f"larger values re-probe more")
-    if not (prior is None or isinstance(prior, CostModelPrior)
-            or prior in ("default", "calibrated")):
-        raise ValueError(
-            f"prior must be 'default', 'calibrated', a CostModelPrior "
-            f"instance or None (got {prior!r})")
+    # Scalar-field validation (max_probes >= 1, elide_margin >= 1.0, the
+    # prior's type, accuracy_budget > 0) lives in TunePolicy.__post_init__ —
+    # one home for the rules, whether the caller passed a policy or the
+    # deprecated keywords.
     if modes is None:
         modes = list(range(ctx.st.ndim))
 

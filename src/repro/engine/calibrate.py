@@ -223,9 +223,12 @@ class CalibratedPrior(CostModelPrior):
             cached = _FIT_CACHE.get(token)
             if cached is not None:
                 return cached
+        # "batched" rows are bucket-level timings from repro.batch (a whole
+        # vmap'd batch per probe) — not single-tensor training data for
+        # these per-tensor design terms, so they are excluded like pallas.
         obs = [o for o in store.observations(device=device)
-               if _base_backend(o.backend) != "pallas" and o.seconds > 0.0
-               and math.isfinite(o.seconds)]
+               if _base_backend(o.backend) not in ("pallas", "batched")
+               and o.seconds > 0.0 and math.isfinite(o.seconds)]
         if len(obs) < min_observations:
             raise CalibrationError(
                 f"{len(obs)} usable observations in {store.path!r} "

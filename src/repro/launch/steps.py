@@ -11,7 +11,7 @@ from ..optim import AdamWConfig, adamw_init, adamw_update
 from .mesh import dp_axes
 
 __all__ = ["make_ctx", "make_train_step", "make_prefill_step",
-           "make_decode_step"]
+           "make_decode_step", "generate"]
 
 
 def make_ctx(mesh, *, seq_sharded: bool = True) -> MeshCtx:
@@ -64,3 +64,28 @@ def make_decode_step(lm: LM, ctx: MeshCtx):
 
 def init_opt_shapes(param_structs, opt_cfg: AdamWConfig):
     return jax.eval_shape(partial(adamw_init, cfg=opt_cfg), param_structs)
+
+
+def generate(lm: LM, params, ctx, prompts: jnp.ndarray, gen: int,
+             max_len: int | None = None, greedy: bool = True):
+    """Prefill via teacher-forced decode of the prompt, then generate `gen`
+    tokens greedily.  Returns (B, gen) int32.
+
+    (Moved here from the retired `launch/serve.py` driver: the repo's
+    serving surface is `repro.serve.DecomposeService` now; this LM loop is
+    only kept for the seed tests and `examples/serve_lm.py`.)"""
+    b, s = prompts.shape
+    max_len = max_len or (s + gen + 8)
+    cache = lm.init_cache(b, max_len=max_len, dtype=jnp.float32)
+    step = jax.jit(make_decode_step(lm, ctx))
+    tok = prompts[:, :1]
+    out = []
+    for t in range(s + gen - 1):
+        logits, cache = step(params, tok, cache, jnp.int32(t))
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        if t + 1 < s:
+            tok = prompts[:, t + 1:t + 2]  # teacher forcing over the prompt
+        else:
+            tok = nxt
+            out.append(nxt)
+    return jnp.concatenate(out, axis=1)

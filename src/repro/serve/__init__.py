@@ -1,0 +1,19 @@
+"""Decomposition serving: request coalescing over the batched CP-ALS path.
+
+A `DecomposeService` accepts single-tensor decomposition requests from any
+number of threads, coalesces them into batches (up to `max_batch` requests
+or `max_wait_ms` of linger, whichever first), and dispatches each batch
+through `repro.batch.cp_als_batched` — so concurrent requests that land in
+the same (shape class, nnz band) bucket share one compiled kernel, one
+autotune decision, and one ALS loop.
+
+This is the product replacement for the growth-seed `repro.launch` LM
+serving scaffold: it serves the repo's actual workload (tensor
+decomposition), and it is built on the supported surface (`repro.batch`,
+`TunePolicy`, `TuningStore`) rather than quarantined code.
+"""
+from __future__ import annotations
+
+from .service import DecomposeService, ServeStats
+
+__all__ = ["DecomposeService", "ServeStats"]

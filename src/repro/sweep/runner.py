@@ -35,6 +35,7 @@ from ..engine.persist import (
 )
 from ..engine.plan import PlanCache
 from ..engine.registry import EngineContext
+from ..engine.tunepolicy import TunePolicy
 from ..formats.convert import FormatCache
 from .config import SweepCell, SweepConfig
 
@@ -189,14 +190,14 @@ def run_sweep(
                                 mem_bytes=config.mem_bytes,
                                 capacity=cell.capacity,
                                 plans=PlanCache(), formats=FormatCache())
-            _engine, rep = autotune_engine(
-                ctx, candidates=list(config.candidates),
+            _engine, rep = autotune_engine(ctx, tune=TunePolicy(
+                candidates=tuple(config.candidates),
                 warmup=config.warmup, reps=config.reps,
                 store=store, prior="default",
                 # The sweep's whole point is the complete observation grid:
                 # no probe pruning, no cross-mode elision.
                 max_probes=None, elide=False,
-                accuracy_budget=config.accuracy_budget)
+                accuracy_budget=config.accuracy_budget))
         except Exception as e:  # blind by design: one broken cell must not kill the grid
             outcomes.append(_outcome(
                 cell, "failed", seconds=time.perf_counter() - t0,

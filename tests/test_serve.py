@@ -1,0 +1,118 @@
+"""repro.serve: coalescing, result correctness under concurrency, warm
+zero-probe dispatch through the service, and failure isolation."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import SparseTensor
+from repro.engine import TunePolicy
+from repro.serve import DecomposeService
+
+RANK = 4
+
+
+def small(shape, nnz, seed=0):
+    rng = np.random.default_rng(seed)
+    coords = np.stack([rng.integers(0, d, size=nnz) for d in shape],
+                      axis=1).astype(np.int32)
+    values = rng.uniform(-1, 1, size=nnz).astype(np.float32)
+    return SparseTensor(coords, values, tuple(shape))
+
+
+def test_submit_returns_correct_shapes_and_order():
+    tensors = [small((10, 9, 8), 40 + i, seed=i) for i in range(6)]
+    with DecomposeService(RANK, n_iters=2, max_batch=4,
+                          max_wait_ms=20.0) as svc:
+        futs = [svc.submit(t) for t in tensors]
+        results = [f.result(timeout=300) for f in futs]
+    for t, r in zip(tensors, results, strict=True):
+        assert [f.shape for f in r.factors] == [(d, RANK) for d in t.shape]
+        assert len(r.fit_history) == 2
+
+
+def test_coalescing_batches_requests():
+    tensors = [small((8, 8, 8), 40, seed=i) for i in range(8)]
+    with DecomposeService(RANK, n_iters=1, max_batch=8,
+                          max_wait_ms=200.0) as svc:
+        futs = [svc.submit(t) for t in tensors]
+        [f.result(timeout=300) for f in futs]
+        stats = svc.stats()
+    # 200ms linger with instant submissions: far fewer batches than requests
+    assert stats.n_requests == 8
+    assert stats.n_batches < 8
+    assert stats.max_batch_seen > 1
+    assert stats.n_completed == 8
+
+
+def test_warm_store_means_zero_probes_across_services(tmp_path):
+    store = str(tmp_path / "serve-store.json")
+    tensors = [small((10, 9, 8), 40, seed=i) for i in range(3)]
+    with DecomposeService(RANK, n_iters=1, tune=TunePolicy(store=store),
+                          max_batch=4, max_wait_ms=50.0) as svc:
+        [svc.decompose(t, timeout=300) for t in tensors]
+        assert svc.stats().n_probes > 0  # cold: the bucket probed once
+    with DecomposeService(RANK, n_iters=1, tune=TunePolicy(store=store),
+                          max_batch=4, max_wait_ms=50.0) as svc2:
+        [svc2.decompose(t, timeout=300) for t in tensors]
+        stats = svc2.stats()
+    assert stats.n_probes == 0
+    assert stats.n_bucket_decisions.get("persisted", 0) >= 1
+
+
+def test_concurrent_clients_all_complete():
+    tensors = [small((10, 9, 8), 40 + i, seed=i) for i in range(12)]
+    results = [None] * len(tensors)
+    with DecomposeService(RANK, n_iters=1, max_batch=6,
+                          max_wait_ms=20.0) as svc:
+        def client(idxs):
+            for i in idxs:
+                results[i] = svc.decompose(tensors[i], timeout=300)
+        threads = [threading.Thread(target=client, args=(range(c, 12, 3),))
+                   for c in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    for t, r in zip(tensors, results, strict=True):
+        assert r is not None
+        assert [f.shape[0] for f in r.factors] == list(t.shape)
+
+
+def test_batch_failure_fails_every_future_in_it():
+    # A float64 member makes its whole coalesced batch invalid (mixed
+    # dtypes): both futures must carry the TypeError, and the service must
+    # keep serving afterwards.
+    good = small((8, 8), 20, seed=1)
+    rng = np.random.default_rng(2)
+    coords = np.stack([rng.integers(0, 8, size=20) for _ in range(2)],
+                      axis=1).astype(np.int32)
+    bad = SparseTensor(coords, rng.uniform(-1, 1, 20), (8, 8))  # f64 values
+    with DecomposeService(RANK, n_iters=1, max_batch=2,
+                          max_wait_ms=500.0) as svc:
+        f1, f2 = svc.submit(good), svc.submit(bad)
+        with pytest.raises(TypeError, match="mixed value dtypes"):
+            f1.result(timeout=300)
+        with pytest.raises(TypeError, match="mixed value dtypes"):
+            f2.result(timeout=300)
+        assert svc.stats().n_failed == 2
+        # service still alive
+        res = svc.decompose(small((8, 8), 20, seed=3), timeout=300)
+        assert res.factors[0].shape == (8, RANK)
+
+
+def test_closed_service_rejects_and_non_tensor_rejected():
+    svc = DecomposeService(RANK, n_iters=1, max_wait_ms=1.0)
+    with pytest.raises(TypeError, match="SparseTensor"):
+        svc.submit("nope")
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(small((4, 4), 5))
+    svc.close()  # idempotent
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError, match="max_batch"):
+        DecomposeService(RANK, max_batch=0)
+    with pytest.raises(ValueError, match="max_wait_ms"):
+        DecomposeService(RANK, max_wait_ms=-1.0)

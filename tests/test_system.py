@@ -46,8 +46,7 @@ def test_dryrun_shape_registry_covers_assignment():
 
 
 def test_serve_generation_end_to_end(trivial_mesh):
-    from repro.launch.serve import generate
-    from repro.launch.steps import make_ctx
+    from repro.launch.steps import generate, make_ctx
     from repro.models import LM
     cfg = get_smoke_config("qwen3_14b")
     lm = LM(cfg)

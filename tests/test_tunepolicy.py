@@ -1,0 +1,131 @@
+"""TunePolicy: the consolidated tuning API — new-style `tune=` calls are
+warning-free, the nine legacy kwargs fold into a policy with exactly one
+DeprecationWarning per call, mixing the two styles is an error, and unknown
+kwargs fail fast with a nearest-match hint."""
+import warnings
+
+import pytest
+
+from repro.core import cp_als, random_tensor
+from repro.engine import TunePolicy, build_engine
+from repro.engine.tunepolicy import TUNE_FIELDS, split_tune_kwargs
+
+RANK = 4
+
+
+@pytest.fixture(scope="module")
+def st():
+    return random_tensor((8, 7, 6), nnz=60, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# policy construction + validation
+# ---------------------------------------------------------------------------
+
+def test_policy_is_frozen_and_normalizes_candidates():
+    pol = TunePolicy(candidates=["chunked", "ref"])
+    assert pol.candidates == ("chunked", "ref")
+    with pytest.raises(AttributeError):
+        pol.warmup = 3
+
+
+@pytest.mark.parametrize(("kwargs", "match"), [
+    (dict(max_probes=0), "max_probes must be >= 1"),
+    (dict(elide_margin=0.5), "elide_margin is a slowdown factor"),
+    (dict(accuracy_budget=0.0), "accuracy_budget is a max relative error"),
+    (dict(reps=0), "reps"),
+    (dict(warmup=-1), "warmup"),
+    (dict(prior=42), "prior must be"),
+])
+def test_policy_validation_messages(kwargs, match):
+    with pytest.raises((ValueError, TypeError), match=match):
+        TunePolicy(**kwargs)
+
+
+def test_split_tune_kwargs_pops_only_tune_fields():
+    bag = dict(warmup=3, store=True, mem_bytes=1024)
+    legacy = split_tune_kwargs(bag)
+    assert legacy == dict(warmup=3, store=True)
+    assert bag == dict(mem_bytes=1024)
+    assert set(legacy) <= set(TUNE_FIELDS)
+
+
+# ---------------------------------------------------------------------------
+# resolve(): new style, legacy shims, mixing
+# ---------------------------------------------------------------------------
+
+def test_new_style_emits_no_warning(st):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        res = cp_als(st, RANK, n_iters=1, engine="auto",
+                     tune=TunePolicy(warmup=0, reps=1))
+    assert res.tune_report is not None
+    assert res.tune_report.warmup == 0
+
+
+def test_legacy_kwargs_warn_exactly_once_per_call(st):
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        res = cp_als(st, RANK, n_iters=1, engine="auto", warmup=0, reps=1)
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1, [str(w.message) for w in deps]
+    msg = str(deps[0].message)
+    assert "cp_als" in msg and "reps" in msg and "warmup" in msg
+    assert "TunePolicy" in msg
+    assert res.tune_report.warmup == 0 and res.tune_report.reps == 1
+
+
+def test_legacy_kwargs_warn_on_build_engine_too(st):
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        eng = build_engine(st, "auto", RANK, warmup=0, reps=1)
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1
+    assert "build_engine" in str(deps[0].message)
+    assert eng.report.warmup == 0
+
+
+def test_mixing_tune_and_legacy_raises(st):
+    with pytest.raises(TypeError, match="both tune= and"):
+        cp_als(st, RANK, n_iters=1, engine="auto",
+               tune=TunePolicy(), warmup=0)
+
+
+def test_tune_must_be_a_policy(st):
+    with pytest.raises(TypeError, match="TunePolicy"):
+        cp_als(st, RANK, n_iters=1, engine="auto", tune={"warmup": 0})
+
+
+# ---------------------------------------------------------------------------
+# unknown-kwarg validation (no more blind **engine_kwargs passthrough)
+# ---------------------------------------------------------------------------
+
+def test_unknown_kwarg_suggests_nearest(st):
+    with pytest.raises(TypeError, match="did you mean 'max_probes'"):
+        cp_als(st, RANK, n_iters=1, engine="auto", max_probe=2)
+
+
+def test_unknown_kwarg_without_neighbour_still_names_caller(st):
+    with pytest.raises(TypeError, match="cp_als"):
+        cp_als(st, RANK, n_iters=1, engine="ref", definitely_not_a_kwarg=1)
+
+
+def test_valid_engine_kwargs_still_pass(st):
+    res = cp_als(st, RANK, n_iters=1, engine="chunked", mem_bytes=256 * 1024)
+    assert res.engine == "chunked"
+
+
+# ---------------------------------------------------------------------------
+# cross-field constraints preserved from the loose-kwargs era
+# ---------------------------------------------------------------------------
+
+def test_budget_on_explicit_backend_still_rejected(st):
+    with pytest.raises(ValueError, match="accuracy_budget only applies"):
+        cp_als(st, RANK, n_iters=1, engine="chunked",
+               tune=TunePolicy(accuracy_budget=0.2))
+
+
+def test_calibrated_prior_needs_store(st):
+    with pytest.raises(ValueError, match="needs a store"):
+        build_engine(st, "auto", RANK,
+                     tune=TunePolicy(prior="calibrated", store=None))
