@@ -28,6 +28,13 @@ import numpy as np
 from repro.batch import BucketPlanCache, cp_als_batched
 from repro.core import SparseTensor, cp_als
 from repro.engine import TunePolicy
+from repro.obs import (
+    enable_tracing,
+    get_tracer,
+    read_jsonl,
+    summarize_text,
+    write_jsonl,
+)
 from repro.serve import DecomposeService
 
 from .common import save, table
@@ -118,7 +125,11 @@ def run_service(tensors, tune: TunePolicy, *, max_batch: int,
                 n_batches=stats.n_batches,
                 n_buckets=stats.n_buckets,
                 max_batch_seen=stats.max_batch_seen,
-                bucket_decisions=stats.n_bucket_decisions)
+                bucket_decisions=stats.n_bucket_decisions,
+                # Service-side histogram estimates (submit→dispatch and
+                # submit→result), alongside the client-measured percentiles.
+                svc_queue_wait_ms=stats.queue_wait_ms,
+                svc_request_ms=stats.request_ms)
 
 
 def parity(batched, sequential) -> float:
@@ -170,11 +181,14 @@ def run(n: int, *, store, max_batch: int, max_wait_ms: float, clients: int,
     worst = parity(bat_results, matched_sequential(tensors, bat_results))
     bat_row["parity_max_abs"] = worst
     rows = [seq_row, bat_row, svc_row]
+    bucket_reports = {id(r.tune_report): r.tune_report
+                      for r in bat_results if r.tune_report is not None}
     payload = dict(
         n_tensors=n, rank=RANK, n_iters=N_ITERS,
         max_batch=max_batch, max_wait_ms=max_wait_ms, clients=clients,
         parity_max_abs=worst, parity_ok=worst <= 1e-5,
         batched_speedup=seq_row["wall_s"] / bat_row["wall_s"],
+        bucket_reports=[rep.to_dict() for rep in bucket_reports.values()],
         rows=rows,
     )
     print(table([{k: (f"{v:.4g}" if isinstance(v, float) else v)
@@ -200,6 +214,9 @@ def main(argv=None):
     ap.add_argument("--max-wait-ms", type=float, default=20.0)
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable span tracing and write the trace JSONL "
+                         "here (see docs/observability.md)")
     args = ap.parse_args(argv)
     n = 24 if args.fast else args.n
     # Closed-loop clients: each waits for its result before submitting the
@@ -207,11 +224,18 @@ def main(argv=None):
     # the service's throughput ceiling on this synthetic load is set by the
     # load generator, not the coalescer.
     clients = 2 if args.fast else args.clients
+    if args.trace:
+        enable_tracing()
     payload = run(n, store=args.store, max_batch=args.max_batch,
                   max_wait_ms=args.max_wait_ms, clients=clients,
                   seed=args.seed)
     path = save("serve_bench", payload)
     print(f"[serve_bench] wrote {path}")
+    if args.trace:
+        tracer = get_tracer()
+        trace_path = write_jsonl(tracer.spans(), args.trace, tracer=tracer)
+        print(f"[serve_bench] wrote {trace_path} ({len(tracer)} spans)")
+        print(summarize_text(*read_jsonl(trace_path)))
     if not payload["parity_ok"]:
         raise SystemExit("parity gate failed")
     return payload

@@ -1,6 +1,6 @@
 """repro — PRISM sparse-MTTKRP tensor decomposition, reproduced on JAX.
 
-The supported product surface, re-exported from the six subsystems:
+The supported product surface, re-exported from the subsystems:
 
 - `repro.core`    — `SparseTensor`, CP-ALS (`cp_als`), the MTTKRP kernels'
                     reference implementations, fixed-point `QFormat`s.
@@ -15,6 +15,10 @@ The supported product surface, re-exported from the six subsystems:
                     autotune decision per bucket.
 - `repro.serve`   — `DecomposeService`, the coalescing request loop over
                     the batched path.
+- `repro.obs`     — span tracing (`span`/`traced`/`enable_tracing`) and
+                    `MetricsRegistry` counters/gauges/histograms, wired
+                    through the tune/decompose/serve stack; traces export
+                    to Perfetto (docs/observability.md).
 
 Everything importable from `repro` directly is API; subpackages not
 re-exported here (`repro.models`, `repro.configs`, the LM launch/optim/data
@@ -48,6 +52,13 @@ from repro.formats import (
     register_format,
     registered_formats,
 )
+from repro.obs import (
+    MetricsRegistry,
+    enable_tracing,
+    get_tracer,
+    span,
+    traced,
+)
 from repro.serve import DecomposeService
 from repro.sweep import SweepConfig, load_config, pareto_report, run_sweep
 
@@ -58,6 +69,7 @@ __all__ = [
     "DecomposeService",
     "FormatCache",
     "FormatStats",
+    "MetricsRegistry",
     "QFormat",
     "SparseTensor",
     "SweepConfig",
@@ -67,6 +79,8 @@ __all__ = [
     "build_engine",
     "cp_als",
     "cp_als_batched",
+    "enable_tracing",
+    "get_tracer",
     "load_config",
     "pareto_report",
     "random_tensor",
@@ -75,5 +89,7 @@ __all__ = [
     "registered_backends",
     "registered_formats",
     "run_sweep",
+    "span",
     "table1_tensor",
+    "traced",
 ]

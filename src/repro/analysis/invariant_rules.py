@@ -457,6 +457,7 @@ PRODUCT_PACKAGES = (
     "repro.engine",
     "repro.formats",
     "repro.kernels",
+    "repro.obs",
     "repro.serve",
     "repro.sweep",
 )

@@ -22,6 +22,7 @@ __all__ = [
     "check_host_sync",
     "check_nondeterminism",
     "check_retrace",
+    "check_trace_in_jit",
     "check_tracer_leak",
 ]
 
@@ -32,6 +33,7 @@ JAX_TARGETS = (
     "src/repro/formats",
     "src/repro/batch",
     "src/repro/serve",
+    "src/repro/obs",
 )
 
 
@@ -435,6 +437,53 @@ def check_tracer_leak(ctx: FileContext) -> Iterator[Finding]:
                         f"jitted '{fn.name}' assigns module global "
                         f"'{t.id}' — the stored value is a tracer that "
                         "outlives its trace; return it instead")
+
+
+# ---------------------------------------------------------------------------
+# trace-in-jit
+# ---------------------------------------------------------------------------
+
+#: Observability entrypoints (repro.obs) that must never run under a trace:
+#: bare-name calls and attribute-call leaves, matched lexically.
+_OBS_NAME_CALLS = ("span", "record_span")
+_OBS_ATTR_CALLS = ("span", "record", "record_span", "observe", "inc",
+                   "set_value")
+
+
+@register_rule(
+    "trace-in-jit",
+    packages=JAX_TARGETS,
+    description=("a span or metric emission (`span(...)`, `record_span`, "
+                 "`.observe()`, `.inc()`, `.set_value()`, `tracer.record`) "
+                 "inside the body of a jitted function"),
+    rationale=("span/metric calls are host-side Python: under `jax.jit` "
+               "they run once at trace time — recording bogus trace-time "
+               "durations instead of per-call ones — and any data they "
+               "capture is a tracer; instrumentation belongs around the "
+               "jitted call, never inside it (the repro.obs overhead "
+               "contract assumes the disabled check is host code)"),
+    example=("jitted 'step' calls `span(...)` at line 7 — the span runs at "
+             "trace time, not per call; move it around the jitted call"),
+)
+def check_trace_in_jit(ctx: FileContext) -> Iterator[Finding]:
+    for fn, _static in _jitted_functions(ctx.tree):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            what = None
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in _OBS_NAME_CALLS):
+                what = f"`{node.func.id}(...)`"
+            elif (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _OBS_ATTR_CALLS):
+                what = f"`.{node.func.attr}(...)`"
+            if what:
+                yield ctx.finding(
+                    "trace-in-jit", node,
+                    f"jitted '{fn.name}' calls {what} — span/metric "
+                    "emission inside a jitted body runs at trace time, not "
+                    "per call; move the instrumentation around the jitted "
+                    "call")
 
 
 # ---------------------------------------------------------------------------

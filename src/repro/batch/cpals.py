@@ -24,6 +24,7 @@ import numpy as np
 
 from ..core.cpals import CPResult, init_factors
 from ..engine.tunepolicy import TunePolicy
+from ..obs.tracing import span
 from .bucketing import Bucket, bucket_tensors, pad_bucket
 from .tune import BucketPlanCache, autotune_bucket
 
@@ -145,43 +146,54 @@ def _decompose_bucket(
     plans: BucketPlanCache | None,
 ) -> list[CPResult]:
     pb = pad_bucket(bucket)
-    engine, report = autotune_bucket(pb, rank, policy, seed=seed, plans=plans)
-    n = len(pb.dims)
+    bucket_sp = span("cp_als_batched.bucket", dims=list(pb.dims),
+                     band=pb.band, size=pb.size, rank=rank, n_iters=n_iters)
+    with bucket_sp:
+        engine, report = autotune_bucket(pb, rank, policy, seed=seed,
+                                         plans=plans)
+        bucket_sp.set(engine=report.chosen, tune_source=report.source)
+        n = len(pb.dims)
 
-    factors = [jnp.asarray(f) for f in _init_batched(bucket, rank, seed)]
-    lam = jnp.ones((pb.size, rank), jnp.float32)
-    values = jnp.asarray(pb.values)
-    norm_x2 = jnp.sum(values * values, axis=1)
-    mask = jnp.asarray(pb.mask)
-    coords = jnp.asarray(pb.coords)
-    nnz = jnp.asarray(pb.nnz, jnp.float32)
+        factors = [jnp.asarray(f) for f in _init_batched(bucket, rank, seed)]
+        lam = jnp.ones((pb.size, rank), jnp.float32)
+        values = jnp.asarray(pb.values)
+        norm_x2 = jnp.sum(values * values, axis=1)
+        mask = jnp.asarray(pb.mask)
+        coords = jnp.asarray(pb.coords)
+        nnz = jnp.asarray(pb.nnz, jnp.float32)
 
-    fit_rows: list[np.ndarray] = []
-    diff_rows: list[np.ndarray] = []
-    iter_times: list[float] = []
-    for _ in range(n_iters):
-        t0 = time.perf_counter()
-        mlast = None
-        for mode in range(n):
-            m = engine(factors, mode)
-            v = jnp.ones((pb.size, rank, rank), jnp.float32)
-            for k in range(n):
-                if k == mode:
-                    continue
-                fk = factors[k]
-                v = v * jnp.einsum("bir,bis->brs", fk, fk)
-            a = m @ jnp.linalg.pinv(v)
-            a, lam = _normalize_batched(a, norm)
-            factors[mode] = a
-            mlast = m
-        # repro-lint: disable=host-sync -- timing barrier: iter_times must measure completed device work, not dispatch
-        jax.block_until_ready(factors[-1])
-        iter_times.append(time.perf_counter() - t0)
-        fits = _fit_batched(norm_x2, factors, lam, mlast)
-        fit_rows.append(np.asarray(fits))
-        if track_diff:
-            diffs = _diff_batched(values, mask, nnz, coords, factors, lam)
-            diff_rows.append(np.asarray(diffs))
+        fit_rows: list[np.ndarray] = []
+        diff_rows: list[np.ndarray] = []
+        iter_times: list[float] = []
+        for it in range(n_iters):
+            iter_sp = span("cp_als_batched.iter", iter=it)
+            with iter_sp:
+                t0 = time.perf_counter()
+                mlast = None
+                for mode in range(n):
+                    m = engine(factors, mode)
+                    v = jnp.ones((pb.size, rank, rank), jnp.float32)
+                    for k in range(n):
+                        if k == mode:
+                            continue
+                        fk = factors[k]
+                        v = v * jnp.einsum("bir,bis->brs", fk, fk)
+                    a = m @ jnp.linalg.pinv(v)
+                    a, lam = _normalize_batched(a, norm)
+                    factors[mode] = a
+                    mlast = m
+                # repro-lint: disable=host-sync -- timing barrier: iter_times must measure completed device work, not dispatch
+                jax.block_until_ready(factors[-1])
+                dt = time.perf_counter() - t0
+                # Same measurement the CPResults report as iter_times.
+                iter_times.append(dt)
+                iter_sp.set(seconds=dt)
+            fits = _fit_batched(norm_x2, factors, lam, mlast)
+            fit_rows.append(np.asarray(fits))
+            if track_diff:
+                diffs = _diff_batched(values, mask, nnz, coords, factors,
+                                      lam)
+                diff_rows.append(np.asarray(diffs))
 
     host_factors = [np.asarray(f) for f in factors]
     host_lam = np.asarray(lam)

@@ -41,6 +41,7 @@ from ..engine.persist import (
 )
 from ..engine.tunepolicy import TunePolicy
 from ..formats import FormatStats
+from ..obs.tracing import record_span, span
 from .bucketing import PaddedBatch
 from .kernels import batched_kernel_names, build_batched_kernel
 
@@ -193,6 +194,9 @@ def autotune_bucket(
                 store_path=store.path if store is not None else None)
             if plans is not None:
                 plans.put(key, entry)
+            record_span("autotune.bucket", 0.0, source=source,
+                        chosen=report.chosen, band=pb.band,
+                        dims=list(pb.dims), size=pb.size, probes=0)
             return _dispatch(built, winners), report
 
     # -- cold: probe every candidate on every mode -------------------------
@@ -215,9 +219,13 @@ def autotune_bucket(
             engine = build_batched_kernel(name, pb)
             per_mode = {}
             for m in modes:
-                per_mode[m] = _time_batched(engine, factors, m,
-                                            warmup=policy.warmup,
-                                            reps=policy.reps)
+                probe_sp = span("autotune.probe", candidate=cid, mode=m,
+                                provenance="measured")
+                with probe_sp:
+                    per_mode[m] = _time_batched(engine, factors, m,
+                                                warmup=policy.warmup,
+                                                reps=policy.reps)
+                    probe_sp.set(seconds=per_mode[m])
         except Exception as e:  # blind by design: one broken kernel must not kill the bucket
             skipped[cid] = f"{type(e).__name__}: {e}"
             continue
@@ -249,6 +257,9 @@ def autotune_bucket(
                 format_stats=FormatStats.estimate(pb.dims, key.nnz).to_json())
     if plans is not None:
         plans.put(key, entry)
+    record_span("autotune.bucket", 0.0, source="measured",
+                chosen=report.chosen, band=pb.band, dims=list(pb.dims),
+                size=pb.size, probes=n_probes)
 
     built = {c: build_batched_kernel(_kernel_name(c), pb)
              for c in sorted(set(winners.values()))}

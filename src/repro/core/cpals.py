@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.tracing import span
 from .sptensor import SparseTensor
 
 __all__ = [
@@ -288,40 +289,58 @@ def cp_als(
     fit_fast = _exact_mttkrp(eng)
     fit_history, diff_history, iter_times = [], [], []
     prev_fit = -np.inf
-    for _ in range(n_iters):
-        t0 = time.perf_counter()
-        mlast = None
-        for mode in range(n):
-            m = eng([jnp.asarray(f) for f in factors], mode)
-            # Pseudo-inverse step: A = M (∘_{k≠mode} F_kᵀF_k)†  (Alg. 1 l.5-7)
-            v = jnp.ones((rank, rank), jnp.float32)
-            for k in range(n):
-                if k == mode:
-                    continue
-                fk = jnp.asarray(factors[k])
-                v = v * (fk.T @ fk)
-            a = m @ jnp.linalg.pinv(v)
-            a, lam = _normalize(a, norm)
-            factors[mode] = a
-            mlast = m
-        # repro-lint: disable=host-sync -- timing barrier: iter_times must measure completed device work, not dispatch
-        jax.block_until_ready(factors[-1])
-        iter_times.append(time.perf_counter() - t0)
+    decompose_sp = span("cp_als.decompose", engine=eng_name,
+                        shape=list(st.shape), nnz=int(st.nnz), rank=rank,
+                        n_iters=n_iters)
+    with decompose_sp:
+        for it in range(n_iters):
+            iter_sp = span("cp_als.iter", iter=it)
+            with iter_sp:
+                t0 = time.perf_counter()
+                mlast = None
+                for mode in range(n):
+                    # Mode spans bound host dispatch time only — the device
+                    # barrier sits at iteration end, so a mode span closing
+                    # does not mean the mode's kernels finished.
+                    with span("cp_als.mode", mode=mode):
+                        m = eng([jnp.asarray(f) for f in factors], mode)
+                        # Pseudo-inverse step:
+                        # A = M (∘_{k≠mode} F_kᵀF_k)†  (Alg. 1 l.5-7)
+                        v = jnp.ones((rank, rank), jnp.float32)
+                        for k in range(n):
+                            if k == mode:
+                                continue
+                            fk = jnp.asarray(factors[k])
+                            v = v * (fk.T @ fk)
+                        a = m @ jnp.linalg.pinv(v)
+                        a, lam = _normalize(a, norm)
+                        factors[mode] = a
+                        mlast = m
+                # repro-lint: disable=host-sync -- timing barrier: iter_times must measure completed device work, not dispatch
+                jax.block_until_ready(factors[-1])
+                dt = time.perf_counter() - t0
+                # One measurement, two views: `iter_times` on the CPResult
+                # and the span's `seconds` attr carry the same number (the
+                # span's own duration adds only its bookkeeping).
+                iter_times.append(dt)
+                iter_sp.set(seconds=dt)
 
-        # Fast-path fit: <X, X̂> = Σ λ_r Σ_i M[i,r]·F_last[i,r] reuses the
-        # last mode's MTTKRP output (M is independent of F_last, which was
-        # updated after M was computed), skipping the O(nnz·R)
-        # reconstruct_nnz pass that the slow path pays every iteration.
-        # Only exact engines qualify (see _exact_mttkrp).
-        f = fit_value(st, factors, lam,
-                      mlast=mlast if fit_fast else None,
-                      last_mode=n - 1 if fit_fast else None)
-        fit_history.append(f)
-        if track_diff:
-            diff_history.append(avg_abs_diff(st, factors, lam))
-        if tol is not None and abs(f - prev_fit) < tol:
-            break
-        prev_fit = f
+            # Fast-path fit: <X, X̂> = Σ λ_r Σ_i M[i,r]·F_last[i,r] reuses
+            # the last mode's MTTKRP output (M is independent of F_last,
+            # which was updated after M was computed), skipping the
+            # O(nnz·R) reconstruct_nnz pass that the slow path pays every
+            # iteration.  Only exact engines qualify (see _exact_mttkrp).
+            with span("cp_als.fit", iter=it, fast=fit_fast):
+                f = fit_value(st, factors, lam,
+                              mlast=mlast if fit_fast else None,
+                              last_mode=n - 1 if fit_fast else None)
+            fit_history.append(f)
+            if track_diff:
+                diff_history.append(avg_abs_diff(st, factors, lam))
+            if tol is not None and abs(f - prev_fit) < tol:
+                break
+            prev_fit = f
+        decompose_sp.set(fit=fit_history[-1] if fit_history else None)
 
     return CPResult(
         [np.asarray(f) for f in factors], np.asarray(lam),

@@ -53,6 +53,7 @@ from ..core.cpals import init_factors
 from ..core.mttkrp import mttkrp_coo
 from ..core.qformat import FIXED_PRESETS, cross_mode_error_bound, value_qformat
 from ..formats import registered_formats
+from ..obs.tracing import record_span, span, tracing_enabled
 from .calibrate import CalibratedPrior, CalibrationError
 from .costmodel import CostModelPrior, WorkloadStats, default_prior
 from .persist import StoredEntry, TuningStore, WorkloadKey, resolve_store
@@ -105,6 +106,45 @@ class AutotuneReport:
         uniq = sorted(set(self.winners.values()))
         return uniq[0] if len(uniq) == 1 else "+".join(uniq)
 
+    def probe_breakdown(self) -> dict[str, int]:
+        """Where the per-mode decisions came from: probes `measured` this
+        build, (candidate, mode) pairs `elided` by the anchored prior, and
+        modes decided from `persisted` store entries (a warm hit pays zero
+        probes, so all its modes count as persisted)."""
+        return {
+            "measured": self.n_probes,
+            "elided": self.n_elided,
+            "persisted": (len(self.winners)
+                          if self.source == "persisted" else 0),
+        }
+
+    def to_dict(self) -> dict:
+        """JSON-safe view of the full report: winners, per-candidate
+        timings/predictions/errors, skip reasons, and the probe-provenance
+        breakdown.  `serve_bench` embeds this per bucket; mode keys stay
+        ints (json.dumps stringifies them)."""
+        return {
+            "chosen": self.chosen,
+            "winners": {int(m): n for m, n in self.winners.items()},
+            "timings": {n: {int(m): float(s) for m, s in per.items()}
+                        for n, per in self.timings.items()},
+            "predicted": {n: {int(m): float(s) for m, s in per.items()}
+                          for n, per in self.predicted.items()},
+            "errors": {n: {int(m): float(e) for m, e in per.items()}
+                       for n, per in self.errors.items()},
+            "candidates": list(self.candidates),
+            "skipped": dict(self.skipped),
+            "warmup": self.warmup,
+            "reps": self.reps,
+            "source": self.source,
+            "probes": self.probe_breakdown(),
+            "prior_order": (list(self.prior_order)
+                            if self.prior_order is not None else None),
+            "prior_name": self.prior_name,
+            "store_path": self.store_path,
+            "accuracy_budget": self.accuracy_budget,
+        }
+
     def summary(self) -> str:
         head = f"autotune: warmup={self.warmup} reps={self.reps}"
         if self.source != "measured":
@@ -118,7 +158,10 @@ class AutotuneReport:
             head += f" prior={self.prior_name}"
         if self.store_path:
             head += f" store={self.store_path}"
-        lines = [head]
+        pb = self.probe_breakdown()
+        lines = [head,
+                 "  probes: " + " ".join(f"{k}={pb[k]}" for k in
+                                         ("measured", "elided", "persisted"))]
         for name, per_mode in sorted(self.timings.items()):
             t = " ".join(f"m{m}={s * 1e3:.2f}ms" for m, s in sorted(per_mode.items()))
             pred = self.predicted.get(name, {})
@@ -373,6 +416,9 @@ def autotune_engine(
             warm = _engine_from_entry(ctx, entry, candidates, modes,
                                       tuning_store)
             if warm is not None:
+                record_span("autotune.decision", 0.0, source="persisted",
+                            chosen=warm[1].chosen, probes=0,
+                            store=tuning_store.path)
                 return warm
 
     # -- cold start: rank by the prior, probe a budgeted subset ------------
@@ -490,14 +536,22 @@ def autotune_engine(
         and no charged probes.  Under an accuracy budget a lossy candidate's
         probe also measures its error; over budget disqualifies the same
         way (the probes already spent are likewise not charged)."""
+        probe_sp = span("autotune.probe", candidate=name, mode=m,
+                        provenance="measured")
         try:
-            if name not in built:
-                built[name] = build_candidate(name, ctx)
-            t = _time_backend(name, built[name], factors, m,
-                              warmup=warmup, reps=reps)
-            err = None
-            if accuracy_budget is not None and name in lossy:
-                err = _measure_error(name, m)
+            # The span covers build + warmup + reps + the error probe;
+            # `seconds` is the best single measured rep.
+            with probe_sp:
+                if name not in built:
+                    built[name] = build_candidate(name, ctx)
+                t = _time_backend(name, built[name], factors, m,
+                                  warmup=warmup, reps=reps)
+                err = None
+                if accuracy_budget is not None and name in lossy:
+                    err = _measure_error(name, m)
+                probe_sp.set(seconds=t)
+                if err is not None:
+                    probe_sp.set(rel_error=err)
         except Exception as e:  # blind by design: any failure disqualifies
             skipped[name] = f"{type(e).__name__}: {e}"
             for book in (built, timings, predicted, probe_counts, errors):
@@ -614,6 +668,19 @@ def autotune_engine(
         prior_name=prior_name, predicted=predicted, n_elided=n_elided,
         store_path=tuning_store.path if tuning_store is not None else None,
         accuracy_budget=accuracy_budget, errors=errors)
+
+    if tracing_enabled():
+        # Elided (candidate, mode) probes appear in the trace as
+        # zero-duration probe records so the tune-decision breakdown sees
+        # them; measured probes were recorded live inside `_probe`.
+        for n in survivors:
+            for m in modes:
+                if m not in timings[n]:
+                    record_span("autotune.probe", 0.0, candidate=n, mode=m,
+                                provenance="elided",
+                                predicted=predicted.get(n, {}).get(m))
+        record_span("autotune.decision", 0.0, source="measured",
+                    chosen=report.chosen, probes=n_probes, elided=n_elided)
 
     if tuning_store is not None and key is not None:
         # An unwritable store degrades to per-process tuning.

@@ -194,6 +194,14 @@ class WorkloadKey:
             capacity=int(cap) if cap is not None else None,
         )
 
+    def fingerprint(self) -> str:
+        """Short stable hex id of the whole key (the workload analogue of
+        `device_fingerprint_id`): the sweep runner tags each cell's trace
+        spans with it, so a trace row is joinable back to the store entry
+        it produced."""
+        blob = json.dumps(self.to_json(), sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()[:12]
+
     def matches(self, other: WorkloadKey, *, nnz_tol: float = 0.1) -> bool:
         """Exact-or-near: everything exact except nnz/density within a
         relative tolerance (the same tensor re-ingested rarely has the

@@ -28,6 +28,8 @@ from ..batch import BucketPlanCache, cp_als_batched
 from ..core.cpals import CPResult
 from ..core.sptensor import SparseTensor
 from ..engine.tunepolicy import TunePolicy
+from ..obs.metrics import MetricsRegistry
+from ..obs.tracing import record_span, span, tracing_enabled
 
 __all__ = ["DecomposeService", "ServeStats"]
 
@@ -40,6 +42,12 @@ class ServeStats:
     buckets; a service running entirely against a warm store holds it at 0.
     `n_bucket_decisions` counts bucket tuning decisions by source:
     "measured" decisions probed, "persisted"/"cached" ones did not.
+
+    `queue_wait_ms` / `dispatch_ms` / `request_ms` carry p50/p99
+    milliseconds estimated from the service's latency histograms
+    (`DecomposeService.metrics`) — empty dicts until the first completed
+    dispatch.  Queue wait is submit→dispatch-start, dispatch is one
+    batch's `cp_als_batched` call, request is submit→result.
     """
 
     n_requests: int = 0
@@ -51,6 +59,9 @@ class ServeStats:
     n_bucket_decisions: dict[str, int] = dataclasses.field(default_factory=dict)
     max_batch_seen: int = 0
     dispatch_seconds: float = 0.0
+    queue_wait_ms: dict[str, float] = dataclasses.field(default_factory=dict)
+    dispatch_ms: dict[str, float] = dataclasses.field(default_factory=dict)
+    request_ms: dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 class DecomposeService:
@@ -99,6 +110,13 @@ class DecomposeService:
         self.norm = norm
         self.seed = int(seed)
         self.plans = BucketPlanCache()
+        # Per-service registry (not the process default): two services'
+        # latencies must not blend.  Queue-wait and request latency observe
+        # one sample per request, dispatch one per batch.
+        self.metrics = MetricsRegistry()
+        self._h_queue_wait = self.metrics.histogram("serve.queue_wait_seconds")
+        self._h_dispatch = self.metrics.histogram("serve.dispatch_seconds")
+        self._h_request = self.metrics.histogram("serve.request_seconds")
         self._queue: queue.Queue = queue.Queue()
         self._stats = ServeStats()
         self._lock = threading.Lock()
@@ -119,7 +137,7 @@ class DecomposeService:
                 raise RuntimeError("DecomposeService is closed")
             self._stats.n_requests += 1
         fut: Future = Future()
-        self._queue.put((st, fut))
+        self._queue.put((st, fut, time.perf_counter()))
         return fut
 
     def decompose(self, st: SparseTensor, timeout: float | None = None) -> CPResult:
@@ -127,11 +145,24 @@ class DecomposeService:
         return self.submit(st).result(timeout=timeout)
 
     def stats(self) -> ServeStats:
-        """A consistent snapshot of the service counters."""
+        """A deep snapshot of the service counters: every container field is
+        copied, so mutating the returned stats (or the service continuing to
+        run) never aliases into a previously-taken snapshot."""
+        latency = {name: self._latency_ms(h) for name, h in (
+            ("queue_wait_ms", self._h_queue_wait),
+            ("dispatch_ms", self._h_dispatch),
+            ("request_ms", self._h_request))}
         with self._lock:
             return dataclasses.replace(
                 self._stats,
-                n_bucket_decisions=dict(self._stats.n_bucket_decisions))
+                n_bucket_decisions=dict(self._stats.n_bucket_decisions),
+                **latency)
+
+    @staticmethod
+    def _latency_ms(h) -> dict[str, float]:
+        if h.count == 0:
+            return {}
+        return {"p50": h.percentile(50) * 1e3, "p99": h.percentile(99) * 1e3}
 
     def close(self, *, timeout: float | None = None) -> None:
         """Stop accepting requests, drain the queue, join the worker."""
@@ -181,25 +212,41 @@ class DecomposeService:
             self._dispatch(batch)
 
     def _dispatch(self, batch: list) -> None:
-        tensors = [st for st, _ in batch]
-        futures = [fut for _, fut in batch]
+        tensors = [st for st, _, _ in batch]
+        futures = [fut for _, fut, _ in batch]
+        submits = [ts for _, _, ts in batch]
         t0 = time.perf_counter()
+        for ts in submits:
+            self._h_queue_wait.observe(t0 - ts)
+        batch_sp = span("serve.batch", n_requests=len(batch))
         try:
-            results = cp_als_batched(
-                tensors, self.rank, self.n_iters, tune=self.tune,
-                norm=self.norm, seed=self.seed, plans=self.plans)
+            # The batch span runs on the worker thread, so the bucket tune
+            # decision and the batched iterations nest under it.
+            with batch_sp:
+                results = cp_als_batched(
+                    tensors, self.rank, self.n_iters, tune=self.tune,
+                    norm=self.norm, seed=self.seed, plans=self.plans)
         except Exception as e:
             # A batch-level failure (mixed dtypes, every kernel broken)
             # fails every request in the batch with the same cause.
+            dt = time.perf_counter() - t0
+            self._h_dispatch.observe(dt)
             with self._lock:
                 self._stats.n_batches += 1
                 self._stats.n_failed += len(futures)
                 self._stats.max_batch_seen = max(self._stats.max_batch_seen,
                                                  len(futures))
-                self._stats.dispatch_seconds += time.perf_counter() - t0
+                self._stats.dispatch_seconds += dt
             for fut in futures:
                 fut.set_exception(e)
             return
+        t1 = time.perf_counter()
+        dt = t1 - t0
+        self._h_dispatch.observe(dt)
+        for ts in submits:
+            self._h_request.observe(t1 - ts)
+        if tracing_enabled():
+            self._record_request_spans(batch_sp, submits, t0, t1)
         reports = {}
         for r in results:
             if r.tune_report is not None:
@@ -209,7 +256,7 @@ class DecomposeService:
             s.n_batches += 1
             s.n_completed += len(futures)
             s.max_batch_seen = max(s.max_batch_seen, len(futures))
-            s.dispatch_seconds += time.perf_counter() - t0
+            s.dispatch_seconds += dt
             s.n_buckets += len(reports)  # one shared report per bucket
             for rep in reports.values():
                 s.n_probes += rep.n_probes
@@ -217,3 +264,18 @@ class DecomposeService:
                 s.n_bucket_decisions[src] = s.n_bucket_decisions.get(src, 0) + 1
         for fut, res in zip(futures, results, strict=True):
             fut.set_result(res)
+
+    @staticmethod
+    def _record_request_spans(batch_sp, submits: list[float],
+                              t0: float, t1: float) -> None:
+        """One `serve.request` root per request (submit→result) with its
+        `serve.queue_wait` child (submit→dispatch-start); both recorded from
+        already-taken perf_counter readings, and tagged with the batch
+        span's id so the trace links each request to the `serve.batch`
+        subtree (tune decision + iterations) that served it."""
+        bid = getattr(batch_sp, "span_id", 0)
+        for i, ts in enumerate(submits):
+            rid = record_span("serve.request", t1 - ts, t_start=ts,
+                              parent_id=0, index=i, batch_span=bid)
+            record_span("serve.queue_wait", t0 - ts, t_start=ts,
+                        parent_id=rid)

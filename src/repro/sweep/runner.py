@@ -37,6 +37,7 @@ from ..engine.plan import PlanCache
 from ..engine.registry import EngineContext
 from ..engine.tunepolicy import TunePolicy
 from ..formats.convert import FormatCache
+from ..obs.tracing import span
 from .config import SweepCell, SweepConfig
 
 __all__ = ["CellOutcome", "SweepResult", "cell_key", "run_sweep"]
@@ -179,25 +180,35 @@ def run_sweep(
             continue
         executed += 1
         t0 = time.perf_counter()
+        # The cell span carries the cell's fingerprint fields, and every
+        # probe/decision span the tuner emits for this cell nests under it
+        # — a sweep trace is attributable cell-by-cell.
+        cell_sp = span("sweep.cell", cell=cell.label, band=cell.band.name,
+                       shape=list(cell.band.shape), nnz=int(cell.nnz),
+                       rank=int(cell.rank), capacity=cell.capacity,
+                       fingerprint=key.fingerprint())
         try:
-            st = random_tensor(cell.band.shape, cell.nnz,
-                               distribution=cell.band.distribution,
-                               seed=cell.band.seed)
-            # Fresh per-cell caches: chunk plans and format layouts are
-            # shared across this cell's candidates but must not pin every
-            # swept tensor in memory for the whole grid.
-            ctx = EngineContext(st=st, rank=cell.rank,
-                                mem_bytes=config.mem_bytes,
-                                capacity=cell.capacity,
-                                plans=PlanCache(), formats=FormatCache())
-            _engine, rep = autotune_engine(ctx, tune=TunePolicy(
-                candidates=tuple(config.candidates),
-                warmup=config.warmup, reps=config.reps,
-                store=store, prior="default",
-                # The sweep's whole point is the complete observation grid:
-                # no probe pruning, no cross-mode elision.
-                max_probes=None, elide=False,
-                accuracy_budget=config.accuracy_budget))
+            with cell_sp:
+                st = random_tensor(cell.band.shape, cell.nnz,
+                                   distribution=cell.band.distribution,
+                                   seed=cell.band.seed)
+                # Fresh per-cell caches: chunk plans and format layouts are
+                # shared across this cell's candidates but must not pin
+                # every swept tensor in memory for the whole grid.
+                ctx = EngineContext(st=st, rank=cell.rank,
+                                    mem_bytes=config.mem_bytes,
+                                    capacity=cell.capacity,
+                                    plans=PlanCache(), formats=FormatCache())
+                _engine, rep = autotune_engine(ctx, tune=TunePolicy(
+                    candidates=tuple(config.candidates),
+                    warmup=config.warmup, reps=config.reps,
+                    store=store, prior="default",
+                    # The sweep's whole point is the complete observation
+                    # grid: no probe pruning, no cross-mode elision.
+                    max_probes=None, elide=False,
+                    accuracy_budget=config.accuracy_budget))
+                cell_sp.set(status="warm" if rep.source == "persisted"
+                            else "measured", probes=rep.n_probes)
         except Exception as e:  # blind by design: one broken cell must not kill the grid
             outcomes.append(_outcome(
                 cell, "failed", seconds=time.perf_counter() - t0,

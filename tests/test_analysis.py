@@ -149,6 +149,42 @@ NONDET_GOOD = _src("""
         return time.perf_counter() - t0, rng.random(n)
 """)
 
+TRACE_JIT_BAD = _src("""
+    import jax
+
+    from repro.obs.tracing import span
+
+    @jax.jit
+    def step(x):
+        with span("kernel.step"):
+            return x * 2
+""")
+
+TRACE_JIT_GOOD = _src("""
+    import jax
+
+    from repro.obs.tracing import span
+
+    @jax.jit
+    def _step(x):
+        return x * 2
+
+    def step(x):
+        with span("kernel.step"):
+            return _step(x)
+""")
+
+TRACE_JIT_BAD_METRIC = _src("""
+    import jax
+
+    from repro.obs.metrics import default_registry
+
+    @jax.jit
+    def step(x):
+        default_registry.counter("steps").inc()
+        return x * 2
+""")
+
 FIXTURES = [
     ("retrace-control", RETRACE_BAD_LOOP, RETRACE_GOOD),
     ("retrace-control", RETRACE_BAD_BRANCH, RETRACE_GOOD),
@@ -156,6 +192,8 @@ FIXTURES = [
     ("host-sync", HOST_SYNC_BAD, HOST_SYNC_GOOD),
     ("tracer-leak", TRACER_LEAK_BAD, TRACER_LEAK_GOOD),
     ("nondeterminism", NONDET_BAD, NONDET_GOOD),
+    ("trace-in-jit", TRACE_JIT_BAD, TRACE_JIT_GOOD),
+    ("trace-in-jit", TRACE_JIT_BAD_METRIC, TRACE_JIT_GOOD),
 ]
 
 

@@ -116,3 +116,43 @@ def test_constructor_validation():
         DecomposeService(RANK, max_batch=0)
     with pytest.raises(ValueError, match="max_wait_ms"):
         DecomposeService(RANK, max_wait_ms=-1.0)
+
+
+def test_stats_reports_latency_percentiles():
+    tensors = [small((6, 5, 4), 20, seed=i) for i in range(5)]
+    with DecomposeService(RANK, n_iters=1, max_batch=4,
+                          max_wait_ms=10.0) as svc:
+        assert svc.stats().request_ms == {}  # empty before any dispatch
+        futs = [svc.submit(t) for t in tensors]
+        [f.result(timeout=300) for f in futs]
+        stats = svc.stats()
+    for field in (stats.queue_wait_ms, stats.dispatch_ms, stats.request_ms):
+        assert set(field) == {"p50", "p99"}
+        assert 0 <= field["p50"] <= field["p99"]
+    # Queue wait is part of the request, so p99 request dominates p50 wait,
+    # and the service-side histograms agree with the raw counters.
+    assert stats.request_ms["p99"] >= stats.queue_wait_ms["p50"]
+    snap = svc.metrics.snapshot()
+    assert snap["serve.request_seconds"]["count"] == len(tensors)
+    assert snap["serve.dispatch_seconds"]["count"] == stats.n_batches
+
+
+def test_stats_snapshot_does_not_alias_service_state():
+    tensors = [small((6, 5, 4), 20, seed=i) for i in range(3)]
+    with DecomposeService(RANK, n_iters=1, max_batch=4,
+                          max_wait_ms=10.0) as svc:
+        futs = [svc.submit(t) for t in tensors]
+        [f.result(timeout=300) for f in futs]
+        before = svc.stats()
+        assert before.n_bucket_decisions  # at least one decision recorded
+        # Mutating every container on the snapshot must not leak back.
+        before.n_bucket_decisions["measured"] = 10_000
+        before.n_bucket_decisions["bogus"] = 1
+        before.queue_wait_ms["p50"] = -1.0
+        after = svc.stats()
+    assert "bogus" not in after.n_bucket_decisions
+    assert after.n_bucket_decisions.get("measured", 0) != 10_000
+    assert after.queue_wait_ms["p50"] >= 0
+    # Two snapshots never share containers either.
+    assert after.n_bucket_decisions is not before.n_bucket_decisions
+    assert after.queue_wait_ms is not before.queue_wait_ms
